@@ -1,0 +1,159 @@
+"""One benchmark per paper table/figure (Figs 4-13), evaluated with the
+calibrated gem5-APU chip model + measured CPU wall time for the runnable
+reduced configs.
+
+Each function returns CSV-ready rows; ``benchmarks.run`` prints them.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro import hw
+from repro.core.characterize import classify_workload, op_table
+from repro.core.cost_model import op_cost, workload_cost
+from repro.core.policy import StaticMode
+from repro.workloads.suite import SUITE
+
+GPU = hw.PAPER_GPU
+STATIC = (StaticMode.UNCACHED, StaticMode.CACHER, StaticMode.CACHERW)
+
+
+def fig4_5_characterization():
+    """GVOPS / memory-requests-per-second analogue: per-workload compute and
+    memory demand under CacheR (paper Figs 4-5)."""
+    rows = []
+    for name, w in SUITE.items():
+        c = workload_cost(w.ops, mode=StaticMode.CACHER, chip=GPU,
+                          launches_per_op=0)
+        flops = sum(op.flops for op in w.ops)
+        rows.append({
+            "name": f"fig4_5/{name}",
+            "gflops_per_s": flops / max(c.t_total, 1e-12) / 1e9,
+            "gmem_reqs_per_s": c.hbm_bytes / 64 / max(c.t_total, 1e-12) / 1e9,
+            "class": classify_workload(w.ops, chip=GPU).value,
+        })
+    return rows
+
+
+def fig6_7_policy_sweep():
+    """Execution time + DRAM traffic per static policy, normalized to
+    Uncached (paper Figs 6-7)."""
+    rows = []
+    for name, w in SUITE.items():
+        base = workload_cost(w.ops, mode=StaticMode.UNCACHED, chip=GPU,
+                             launches_per_op=1)
+        for mode in STATIC:
+            c = workload_cost(w.ops, mode=mode, chip=GPU, launches_per_op=1)
+            rows.append({
+                "name": f"fig6_7/{name}/{mode.value}",
+                "norm_time": c.t_total / max(base.t_total, 1e-30),
+                "norm_dram_traffic": c.hbm_bytes / max(base.hbm_bytes, 1e-30),
+            })
+    return rows
+
+
+def fig8_stalls():
+    """Cache-stall proxy per policy (paper Fig 8): modeled stall fraction
+    plus allocator shrink events (blocking baseline)."""
+    from repro.core.allocator import plan_op
+    from repro.core.policy import static_assignment
+
+    rows = []
+    for name, w in SUITE.items():
+        for mode in (StaticMode.CACHER, StaticMode.CACHERW):
+            stall = 0.0
+            shrinks = 0
+            for op in w.ops:
+                c = op_cost(op, mode=mode, chip=GPU, allocation_bypass=False,
+                            rinse=False)
+                stall = max(stall, c.stall_frac)
+                shrinks += plan_op(op, static_assignment(op, mode), chip=GPU,
+                                   allocation_bypass=False).shrink_events
+            rows.append({
+                "name": f"fig8/{name}/{mode.value}",
+                "stall_frac": stall,
+                "shrink_events": shrinks,
+            })
+    return rows
+
+
+def fig9_13_row_locality():
+    """HBM write-burst contiguity (DRAM row-hit analogue) per policy, and
+    with rinsing enabled (paper Figs 9, 13)."""
+    rows = []
+    for name, w in SUITE.items():
+        for label, mode, ab, rinse in (
+            ("uncached", StaticMode.UNCACHED, False, False),
+            ("cacherw", StaticMode.CACHERW, False, False),
+            ("cacherw_AB", StaticMode.CACHERW, True, False),
+            ("cacherw_AB_CR", StaticMode.CACHERW, True, True),
+        ):
+            c = workload_cost(w.ops, mode=mode, chip=GPU,
+                              allocation_bypass=ab, rinse=rinse,
+                              launches_per_op=0)
+            rows.append({
+                "name": f"fig9_13/{name}/{label}",
+                "write_contiguity": c.write_contiguity,
+            })
+    return rows
+
+
+def fig10_12_optimizations():
+    """The paper's headline (Figs 10-12): AB, +CR, +PCby vs best/worst
+    static policy.  norm_time < ~1.0 means the adaptive stack matched or
+    beat the best static configuration."""
+    rows = []
+    for name, w in SUITE.items():
+        stat = {
+            m: workload_cost(w.ops, mode=m, chip=GPU, launches_per_op=1)
+            for m in STATIC
+        }
+        best = min(stat.values(), key=lambda c: c.t_total)
+        worst = max(stat.values(), key=lambda c: c.t_total)
+        variants = {
+            "cacherw_AB": dict(mode=StaticMode.CACHERW,
+                               allocation_bypass=True, rinse=False),
+            "cacherw_AB_CR": dict(mode=StaticMode.CACHERW,
+                                  allocation_bypass=True, rinse=True),
+            "adaptive_PCby": dict(mode=StaticMode.ADAPTIVE),
+        }
+        for label, kw in variants.items():
+            c = workload_cost(w.ops, chip=GPU, launches_per_op=1, **kw)
+            rows.append({
+                "name": f"fig10_12/{name}/{label}",
+                "norm_time_vs_best_static": c.t_total / max(best.t_total, 1e-30),
+                "norm_time_vs_worst_static": c.t_total / max(worst.t_total, 1e-30),
+                "dram_traffic_vs_best": c.hbm_bytes / max(best.hbm_bytes, 1e-30),
+            })
+    return rows
+
+
+def wall_time_small():
+    """Measured CPU wall time for the runnable reduced workloads (sanity
+    anchor for the model: relative op costs, not absolute TPU numbers)."""
+    rows = []
+    for name, w in SUITE.items():
+        if w.runnable is None:
+            continue
+        fn = jax.jit(w.runnable)
+        key = jax.random.PRNGKey(0)
+        fn(key).block_until_ready()           # compile
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            fn(key).block_until_ready()
+        dt = (time.perf_counter() - t0) / n
+        rows.append({"name": f"wall/{name}", "us_per_call": dt * 1e6})
+    return rows
+
+
+def characterization_table():
+    rows = []
+    for name, w in SUITE.items():
+        for r in op_table(w.ops)[:1]:
+            rows.append({"name": f"ops/{name}", **{
+                k: v for k, v in r.items() if k != "name"
+            }})
+    return rows

@@ -1,0 +1,94 @@
+"""Kernel microbenchmarks: CPU wall time of the jitted XLA-path ops and the
+modeled v5e time per policy (the TPU target numbers come from the roofline
+model; CPU wall time anchors relative costs only)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import hw
+from repro.core import StaticMode, make_engine
+from repro.core.characterize import attention_op, matmul_op
+from repro.core.cost_model import op_cost
+
+
+def _time(fn, *args, n=5):
+    y = fn(*args)
+    jax.tree_util.tree_map(lambda a: a.block_until_ready(), y)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        y = fn(*args)
+        jax.tree_util.tree_map(lambda a: a.block_until_ready(), y)
+    return (time.perf_counter() - t0) / n
+
+
+def matmul_policy_ablation():
+    """Modeled v5e time for a training GEMM under each policy + the
+    engine's plan (paper technique applied to the TPU kernel)."""
+    rows = []
+    eng = make_engine()
+    for (m, k, n) in [(4096, 4096, 4096), (8192, 8192, 1024),
+                      (512, 8192, 51200)]:
+        op = matmul_op(m, k, n, dtype="bf16")
+        for mode in (StaticMode.UNCACHED, StaticMode.CACHER,
+                     StaticMode.CACHERW):
+            c = op_cost(op, mode=mode, chip=hw.V5E)
+            rows.append({
+                "name": f"kern_mm/{m}x{k}x{n}/{mode.value}",
+                "modeled_us": c.t_total * 1e6,
+                "hbm_mb": c.hbm_bytes / 1e6,
+            })
+        plan = eng.plan_op(op)
+        c = eng.cost(op, plan)
+        rows.append({
+            "name": f"kern_mm/{m}x{k}x{n}/engine",
+            "modeled_us": c.t_total * 1e6,
+            "hbm_mb": c.hbm_bytes / 1e6,
+            "vmem_mb": plan.vmem_bytes / 1e6,
+        })
+    return rows
+
+
+def attention_policy_ablation():
+    rows = []
+    eng = make_engine()
+    for (b, hq, hkv, s, d) in [(8, 32, 4, 4096, 128), (1, 32, 8, 32768, 128)]:
+        op = attention_op(b, hq, hkv, s, s, d)
+        plan = eng.plan_op(op)
+        for mode in (StaticMode.UNCACHED, StaticMode.CACHERW):
+            c = op_cost(op, mode=mode, chip=hw.V5E)
+            rows.append({
+                "name": f"kern_attn/b{b}h{hq}s{s}/{mode.value}",
+                "modeled_us": c.t_total * 1e6,
+                "hbm_mb": c.hbm_bytes / 1e6,
+            })
+        c = eng.cost(op, plan)
+        rows.append({
+            "name": f"kern_attn/b{b}h{hq}s{s}/engine",
+            "modeled_us": c.t_total * 1e6,
+            "hbm_mb": c.hbm_bytes / 1e6,
+            "blocks": str(plan.block),
+        })
+    return rows
+
+
+def xla_wall_times():
+    """Wall time of the pure-XLA model ops on CPU (small shapes)."""
+    rows = []
+    from repro.models import common as cm
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 64, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 512, 2, 64), jnp.float32)
+
+    naive = jax.jit(lambda q, k, v: cm._sdpa_naive(q, k, v, True, 0))
+    chunk = jax.jit(lambda q, k, v: cm._sdpa_chunked(q, k, v, True, 0,
+                                                     chunk=128))
+    rows.append({"name": "xla/sdpa_naive",
+                 "us_per_call": _time(naive, q, k, v) * 1e6})
+    rows.append({"name": "xla/sdpa_chunked",
+                 "us_per_call": _time(chunk, q, k, v) * 1e6})
+    return rows

@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is wall time
+where measured, modeled microseconds where analytical; ``derived`` packs the
+figure-specific metrics.
+"""
+from __future__ import annotations
+
+import json
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", r.pop("modeled_us", ""))
+        derived = json.dumps(r, sort_keys=True) if r else ""
+        print(f"{name},{us},{derived}")
+
+
+def main() -> None:
+    from benchmarks import figures, kernel_bench
+
+    print("name,us_per_call,derived")
+    _emit(figures.fig4_5_characterization())
+    _emit(figures.fig6_7_policy_sweep())
+    _emit(figures.fig8_stalls())
+    _emit(figures.fig9_13_row_locality())
+    _emit(figures.fig10_12_optimizations())
+    _emit(figures.wall_time_small())
+    _emit(figures.characterization_table())
+    _emit(kernel_bench.matmul_policy_ablation())
+    _emit(kernel_bench.attention_policy_ablation())
+    _emit(kernel_bench.xla_wall_times())
+
+
+if __name__ == "__main__":
+    main()

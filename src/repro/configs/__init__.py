@@ -1,0 +1,2 @@
+"""Per-architecture configuration files (exact public-literature configs)."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401

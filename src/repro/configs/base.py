@@ -1,0 +1,136 @@
+"""Model/run configuration dataclasses shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # Transformer details
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_kind: str = "rms"           # rms | layer
+    act: str = "swiglu"              # swiglu | gelu
+    norm_eps: float = 1e-5
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_dispatch: str = "dense"      # "dense" | "sorted" (capacity-based)
+    # SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # Hybrid (zamba2): shared attention block every k SSM layers
+    shared_attn_every: int = 0
+    # Encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500              # stub frame-embedding length
+    # VLM: cross-attention to vision tokens every k layers
+    cross_attn_every: int = 0
+    n_vis_tokens: int = 1600
+    # Numerics / sharding
+    dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 2048   # pad vocab so `model` axis (16) divides it
+    # Sub-quadratic attention available (gates the long_500k shape cell)
+    subquadratic: bool = False
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    def param_count(self) -> int:
+        """Analytical parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim_
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        attn = d * (hq + 2 * hkv) * dh + hq * dh * d
+        mlp = (3 if self.act == "swiglu" else 2) * d * f
+        if self.family == "moe":
+            mlp = self.n_experts * mlp + d * self.n_experts
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            di, g, ds, h = self.d_inner, self.ssm_groups, self.ssm_state, self.ssm_heads
+            ssm = (
+                d * (2 * di + 2 * g * ds + h)      # in_proj
+                + self.ssm_conv * (di + 2 * g * ds)  # conv
+                + di * d + 2 * h + di              # out_proj, A/D, norm
+            )
+        per_layer = 2 * d  # norms
+        if self.family == "ssm":
+            layer = ssm + per_layer
+            total = self.n_layers * layer
+        elif self.family == "hybrid":
+            n_shared = (
+                self.n_layers // self.shared_attn_every
+                if self.shared_attn_every else 0
+            )
+            total = self.n_layers * (ssm + per_layer) + (attn + mlp + 2 * d)
+            del n_shared  # single shared block: params counted once
+        elif self.family == "encdec":
+            enc = self.enc_layers * (attn + mlp + per_layer)
+            dec = self.n_layers * (2 * attn + mlp + 3 * d)
+            total = enc + dec
+        elif self.family == "vlm":
+            n_cross = (
+                self.n_layers // self.cross_attn_every
+                if self.cross_attn_every else 0
+            )
+            n_self = self.n_layers - n_cross
+            total = n_self * (attn + mlp + per_layer) + n_cross * (
+                attn + mlp + per_layer
+            )
+        else:
+            total = self.n_layers * (attn + mlp + per_layer)
+        return int(total + emb)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top_k + router only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        mlp_all = self.n_experts * (3 * d * f)
+        mlp_act = self.top_k * (3 * d * f)
+        return self.param_count() - self.n_layers * (mlp_all - mlp_act)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jitted wrapper with policy-engine planning and padding) and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,38 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
+on CPU in interpret mode.  ``interpret_default()`` picks the mode from the
+backend so the same ops run on both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.cache
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def pad_dim(x: jnp.ndarray, axis: int, multiple: int, value=0.0) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = round_up(size, multiple) - size
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+NEG_INF = -1e30

@@ -1,0 +1,157 @@
+"""GQA decode attention with split-KV (flash-decoding) Pallas kernel.
+
+Decode is the paper's throughput-sensitive regime personified: the KV cache
+is a huge, zero-reuse stream (each cache line is touched exactly once per
+step), so the right policy is pure STREAM with maximal HBM bandwidth —
+bypass, don't cache.  The only RESIDENT_ACCUM state is the online-softmax
+accumulator (hq, d), tiny and revisited every block.
+
+``splits > 1`` partitions the KV sequence across grid workers that each
+write (acc, m, l) partials; a cheap log-sum-exp combine merges them.  On
+real TPUs the split dimension is marked PARALLEL so Mosaic can spread it
+over cores; it is also the schedule the sequence-parallel decoder uses
+across chips (see repro/distributed/sp_decode.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, cdiv
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, len_ref,
+    acc_out, m_out, l_out,
+    acc_ref, m_ref, l_ref,
+    *,
+    bkv: int,
+    kv_steps: int,
+    scale: float,
+):
+    s_idx = pl.program_id(2)   # split index
+    ik = pl.program_id(3)      # kv block within split
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid_len = len_ref[0]
+    base = (s_idx * kv_steps + ik) * bkv
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)[0]
+    mask = pos < valid_len
+
+    q = q_ref[0].astype(jnp.float32)                    # (hq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (hq, bkv)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask[None, :], jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bkv, d)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ik == kv_steps - 1)
+    def _flush():
+        acc_out[0, :, 0, :] = acc_ref[...]
+        m_out[0, :, 0] = m_ref[...]
+        l_out[0, :, 0] = l_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "bkv", "splits", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,          # (b, hq, d)
+    k: jnp.ndarray,          # (b, hkv, s, d)
+    v: jnp.ndarray,          # (b, hkv, s, d)
+    lengths: jnp.ndarray | None = None,   # (b,) valid lengths
+    *,
+    scale: float | None = None,
+    bkv: int = 512,
+    splits: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    bkv = min(bkv, s)
+    # Pad s so it divides evenly into splits * kv_steps * bkv.
+    per_split = cdiv(cdiv(s, splits), bkv) * bkv
+    s_pad = per_split * splits
+    if s_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    kv_steps = per_split // bkv
+
+    grid = (b, hkv, splits, kv_steps)
+    acc, m, l = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, bkv=bkv, kv_steps=kv_steps, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, group, d), lambda ib, ih, sp, ik, g=group: (ib, ih, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bkv, d),
+                lambda ib, ih, sp, ik, ks=kv_steps: (ib, ih, sp * ks + ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bkv, d),
+                lambda ib, ih, sp, ik, ks=kv_steps: (ib, ih, sp * ks + ik, 0),
+            ),
+            pl.BlockSpec((1,), lambda ib, ih, sp, ik: (ib,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, group, 1, d), lambda ib, ih, sp, ik: (ib, ih, sp, 0)
+            ),
+            pl.BlockSpec((1, group, 1), lambda ib, ih, sp, ik: (ib, ih, sp)),
+            pl.BlockSpec((1, group, 1), lambda ib, ih, sp, ik: (ib, ih, sp)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, splits, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, splits), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths.astype(jnp.int32))
+    return combine_partials(acc, m, l).astype(q.dtype)
+
+
+def combine_partials(
+    acc: jnp.ndarray,  # (b, hq, splits, d)
+    m: jnp.ndarray,    # (b, hq, splits)
+    l: jnp.ndarray,    # (b, hq, splits)
+) -> jnp.ndarray:
+    """Log-sum-exp merge of flash-decoding partials (also used across chips
+    by the sequence-parallel decoder)."""
+    m_glob = jnp.max(m, axis=-1, keepdims=True)
+    w = jnp.exp(m - m_glob)
+    l_glob = jnp.sum(l * w, axis=-1)
+    num = jnp.sum(acc * w[..., None], axis=2)
+    return num / jnp.maximum(l_glob, 1e-30)[..., None]

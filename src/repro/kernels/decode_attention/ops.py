@@ -1,0 +1,45 @@
+"""Jitted public wrapper for decode attention: split planning from the engine.
+
+The split count is a policy decision: more splits means more parallelism on
+the zero-reuse KV stream but more partial (acc, m, l) write-through traffic
+— exactly the STREAM-output trade-off the cost model prices.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import CachePolicyEngine
+from repro.kernels.common import interpret_default
+
+
+def plan_splits(s: int, bkv: int, target_parallelism: int = 8) -> int:
+    """Enough splits to feed the cores without drowning in partials."""
+    blocks = max(1, s // bkv)
+    return max(1, min(target_parallelism, blocks))
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray | None = None,
+    *,
+    scale: float | None = None,
+    engine: CachePolicyEngine | None = None,
+    bkv: int | None = None,
+    splits: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    from repro.kernels.decode_attention.decode_attention import (
+        decode_attention as _kernel,
+    )
+
+    interpret = interpret_default() if interpret is None else interpret
+    s = k.shape[2]
+    bkv = bkv or 512
+    if splits is None:
+        splits = plan_splits(s, bkv)
+    return _kernel(
+        q, k, v, lengths, scale=scale, bkv=min(bkv, s), splits=splits,
+        interpret=interpret,
+    )

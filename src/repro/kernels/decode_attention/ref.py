@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (b, hq, d)
+    k: jnp.ndarray,        # (b, hkv, s, d)
+    v: jnp.ndarray,        # (b, hkv, s, d)
+    lengths: jnp.ndarray | None = None,  # (b,) valid KV lengths
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * scale
+    if lengths is not None:
+        mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhs,bhsd->bhd", p, vx.astype(jnp.float32))
+    return o.astype(q.dtype)

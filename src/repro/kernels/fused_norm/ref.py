@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for fused (RMS/Layer)Norm + optional residual add."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_norm(
+    x: jnp.ndarray,                   # (..., d)
+    weight: jnp.ndarray,              # (d,)
+    bias: jnp.ndarray | None = None,  # (d,) -> LayerNorm-style shift
+    residual: jnp.ndarray | None = None,
+    eps: float = 1e-6,
+    kind: str = "rms",                # "rms" | "layer"
+) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    if residual is not None:
+        h = h + residual.astype(jnp.float32)
+    if kind == "layer":
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        y = (h - mu) / jnp.sqrt(var + eps)
+    else:
+        ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+        y = h / jnp.sqrt(ms + eps)
+    y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the policy-parameterized matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the MoE grouped expert GEMM (capacity layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul(
+    x: jnp.ndarray,       # (e, c, k) tokens gathered per expert
+    w: jnp.ndarray,       # (e, k, n) expert weights
+    counts: jnp.ndarray | None = None,  # (e,) valid tokens per expert
+    out_dtype=None,
+) -> jnp.ndarray:
+    e, c, k = x.shape
+    out = jnp.einsum(
+        "eck,ekn->ecn", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    if counts is not None:
+        mask = jnp.arange(c)[None, :, None] < counts[:, None, None]
+        out = jnp.where(mask, out, 0.0)
+    return out.astype(out_dtype or x.dtype)

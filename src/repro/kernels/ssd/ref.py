@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the Mamba-2 SSD layer: sequential state recurrence.
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * outer(B_t, x_t)
+    y_t = C_t @ S_t + D_h * x_t
+
+with B/C shared across the heads of a group (n_groups <= n_heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd(
+    x: jnp.ndarray,    # (b, l, h, dh)
+    dt: jnp.ndarray,   # (b, l, h)      positive step sizes
+    A: jnp.ndarray,    # (h,)           negative decay rates
+    B: jnp.ndarray,    # (b, l, g, ds)
+    C: jnp.ndarray,    # (b, l, g, ds)
+    D: jnp.ndarray | None = None,  # (h,) skip
+    init_state: jnp.ndarray | None = None,  # (b, h, ds, dh)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, l, h, dh = x.shape
+    g = B.shape[2]
+    ds = B.shape[3]
+    hpg = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), hpg, axis=2)  # (b, l, h, ds)
+    Cf = jnp.repeat(C.astype(jnp.float32), hpg, axis=2)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,dh), (b,h), (b,h,ds), (b,h,ds)
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]       # (b,h,1,1)
+        S = S * decay + (dtt[..., None] * Bt)[..., None] * xt[..., None, :]
+        y = jnp.einsum("bhs,bhsd->bhd", Ct, S)
+        return S, y
+
+    S0 = (
+        jnp.zeros((b, h, ds, dh), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (b, l, h, dh)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), S

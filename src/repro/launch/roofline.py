@@ -1,0 +1,157 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e constants):
+
+    t_compute    = HLO_FLOPs/chip   / 197e12 (bf16)
+    t_memory     = HLO_bytes/chip   / 819e9
+    t_collective = sum(bytes_moved) / (links x 50e9)
+
+``cost_analysis`` supplies FLOPs and bytes; collective bytes come from
+parsing the optimized (post-SPMD) HLO: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op we sum the result
+operand sizes (the per-device module has local shapes) and apply ring
+algorithm factors per kind.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+from repro import hw
+from repro.configs.base import ModelConfig, ShapeConfig
+
+_DTYPE_RE = r"(?:pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)"
+_SHAPE_RE = re.compile(rf"({_DTYPE_RE})\[([0-9,]*)\]")
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# `%name = TYPE kind(` — TYPE may be a tuple of shapes.
+_COLL_LINE = re.compile(
+    rf"=\s+(\([^)]*\)|{_DTYPE_RE}\[[0-9,]*\][^ ]*)\s+"
+    rf"({'|'.join(_COLL_KINDS)})(-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# Ring-algorithm bytes-moved-per-participant factors, as multiples of the
+# RESULT size parsed from the local module.
+#   all-gather: result is the gathered (global) tensor; moved ~ (n-1)/n x result
+#   all-reduce: result local; ring moves 2 x (n-1)/n x size
+#   reduce-scatter: result is the scattered shard; moved ~ (n-1) x result
+#   all-to-all / collective-permute: ~ 1 x result
+def _moved_bytes(kind: str, result_bytes: float, group: int) -> float:
+    g = max(group, 2)
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    return result_bytes
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Sum result bytes + estimated moved bytes per collective kind."""
+    per_kind: dict[str, dict[str, float]] = {
+        k: {"count": 0, "result_bytes": 0.0, "moved_bytes": 0.0}
+        for k in _COLL_KINDS
+    }
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE.search(line)
+        if not m:
+            continue
+        type_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            group = int(gi.group(2)) if gi else 16
+        rb = _shape_bytes(type_str)
+        per_kind[kind]["count"] += 1
+        per_kind[kind]["result_bytes"] += rb
+        per_kind[kind]["moved_bytes"] += _moved_bytes(kind, rb, group)
+    total_moved = sum(v["moved_bytes"] for v in per_kind.values())
+    total_count = sum(v["count"] for v in per_kind.values())
+    del seen_done
+    return {"per_kind": per_kind, "total_moved_bytes": total_moved,
+            "total_count": total_count}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D forward-only."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_terms(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    cost: dict,
+    colls: dict,
+    mem: dict,
+    chip: hw.Chip = hw.V5E,
+) -> dict[str, Any]:
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis on the SPMD module reports PER-DEVICE numbers.
+    t_compute = flops / chip.peak_flops_bf16
+    t_memory = bytes_accessed / chip.hbm_bw
+    t_coll = colls["total_moved_bytes"] / (chip.ici_bw_per_link * chip.ici_links)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get) if any(terms.values()) else "n/a"
+    mf = model_flops(cfg, shape)
+    mf_chip = mf / n_chips
+    useful = mf_chip / flops if flops else 0.0
+    bound = max(terms.values()) if any(terms.values()) else 0.0
+    # Roofline fraction: useful model FLOP throughput vs peak, given the
+    # bound set by the dominant term.
+    frac = (mf_chip / chip.peak_flops_bf16) / bound if bound else 0.0
+    hbm_need = (mem or {}).get("argument_size_in_bytes", 0) + (mem or {}).get(
+        "temp_size_in_bytes", 0
+    )
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf_chip,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": frac,
+        "fits_hbm": bool(hbm_need <= chip.hbm_bytes) if hbm_need else None,
+        "hbm_need_bytes": hbm_need,
+    }

@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run currency.
+
+Weak-type-correct, shardable, no device allocation.  ``input_specs``
+returns the kwargs for the step function selected by the shape's kind:
+
+* train  -> train_step(state, batch)
+* prefill -> prefill(params, cache_empty, tokens)
+* decode  -> decode_step(params, cache_full, tokens_1)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vis"] = _sds((b, cfg.n_vis_tokens, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, min(cfg.enc_seq, s), cfg.d_model), cfg.dtype)
+    return batch
+
+
+def cache_shape(model, cfg: ModelConfig, batch: int, max_len: int):
+    """Shape-only serving cache via eval_shape (no allocation)."""
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["vis"] = _sds((batch, cfg.n_vis_tokens, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        kwargs["frames"] = _sds(
+            (batch, min(cfg.enc_seq, max_len), cfg.d_model), cfg.dtype
+        )
+
+    params_shape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    cache = jax.eval_shape(
+        lambda p, kw: model.init_cache(p, batch=batch, max_len=max_len, **kw),
+        params_shape, kwargs,
+    )
+    return cache, kwargs
+
+
+def input_specs(arch: str, shape_name: str, model=None, cfg=None,
+                smoke: bool = False) -> dict[str, Any]:
+    """All ShapeDtypeStructs needed to lower the cell's step function."""
+    from repro.models import build_model, get_config
+    from repro.train.step import init_train_state
+
+    cfg = cfg or get_config(arch, smoke=smoke)
+    model = model or build_model(cfg)
+    shape = SHAPES[shape_name]
+
+    params_shape = jax.eval_shape(
+        lambda k: init_train_state(model, k), jax.random.PRNGKey(0)
+    )
+    if shape.kind == "train":
+        return {
+            "kind": "train",
+            "state": params_shape,
+            "batch": batch_specs(cfg, shape),
+        }
+    b = shape.global_batch
+    if shape.kind == "prefill":
+        cache, extra = cache_shape(model, cfg, b, shape.seq_len)
+        return {
+            "kind": "prefill",
+            "params": params_shape["params"],
+            "cache": cache,
+            "tokens": _sds((b, shape.seq_len), jnp.int32),
+            "extras": extra,
+        }
+    # decode: one new token against a full cache of seq_len.
+    cache, extra = cache_shape(model, cfg, b, shape.seq_len)
+    return {
+        "kind": "decode",
+        "params": params_shape["params"],
+        "cache": cache,
+        "tokens": _sds((b, 1), jnp.int32),
+        "extras": extra,
+    }

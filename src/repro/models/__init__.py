@@ -1,0 +1,2 @@
+"""Model zoo: pure-JAX definitions for the 10 assigned architectures."""
+from repro.models.registry import ARCHS, build_model, get_config, runnable_cells  # noqa: F401

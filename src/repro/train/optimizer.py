@@ -1,0 +1,149 @@
+"""AdamW with mixed precision, schedules (cosine / WSD), optional ZeRO-1.
+
+Pure JAX (no optax): state is a pytree {mu, nu, count} with fp32 master
+moments; params may be bf16 (master-quality updates are computed in fp32
+and cast back).  ZeRO-1 sharding of optimizer state over the data axis is
+expressed purely through shardings (the update math is elementwise, so
+GSPMD partitions it for free) — see ``opt_shardings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"        # "cosine" | "wsd" | "const"
+    decay_frac: float = 0.1         # WSD: final fraction of steps that decay
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Warmup + (cosine | warmup-stable-decay | const)."""
+    stepf = step.astype(jnp.float32)
+    warm = jnp.minimum(stepf / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (stepf - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t)
+        )
+    elif cfg.schedule == "wsd":
+        # MiniCPM warmup-stable-decay: constant, then linear decay in the
+        # final decay_frac of training.
+        decay_start = 1.0 - cfg.decay_frac
+        frac = jnp.where(
+            t < decay_start,
+            1.0,
+            1.0 - (1 - cfg.min_lr_frac) * (t - decay_start) / cfg.decay_frac,
+        )
+    else:
+        frac = jnp.ones_like(t)
+    return cfg.lr * warm * frac
+
+
+def init_state(params: Any) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))
+
+
+def _is_matrix(path: str, p) -> bool:
+    return p.ndim >= 2
+
+
+def apply_updates(
+    params: Any, grads: Any, state: dict[str, Any], cfg: AdamWConfig
+) -> tuple[Any, dict[str, Any], dict[str, jnp.ndarray]]:
+    count = state["count"] + 1
+    lr = schedule_lr(cfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / (1 - cfg.b1 ** count.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def opt_shardings(param_shardings: Any, params_shape: Any, mesh,
+                  zero1: bool = False):
+    """Shardings for optimizer state.
+
+    ``zero1=True`` additionally shards each moment's first replicated,
+    data-divisible dim over the data axis (ZeRO-1): memory/chip for mu/nu
+    drops by |data|; the elementwise update is partitioned by GSPMD with no
+    extra logic here.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    data_size = mesh.shape["data"]
+
+    def moment(s, shape):
+        if not zero1:
+            return s
+        spec = tuple(s.spec) + (None,) * (len(shape) - len(s.spec))
+        used = {a for part in spec if part for a in
+                ((part,) if isinstance(part, str) else part)}
+        if "data" in used:
+            return s
+        for i, part in enumerate(spec):
+            if part is None and shape[i] % data_size == 0 and shape[i] >= data_size:
+                new = list(spec)
+                new[i] = "data"
+                return NamedSharding(s.mesh, P(*new))
+        return s
+
+    mu = jax.tree_util.tree_map(
+        lambda s, x: moment(s, tuple(x.shape)), param_shardings, params_shape
+    )
+    return {
+        "mu": mu,
+        "nu": mu,
+        "count": NamedSharding(mesh, P()),
+    }

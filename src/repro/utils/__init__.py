@@ -1,0 +1,1 @@
+from repro.utils.tree import tree_bytes, tree_param_count  # noqa: F401

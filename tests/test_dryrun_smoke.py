@@ -1,0 +1,70 @@
+"""Dry-run machinery smoke tests (subprocess: needs 512 forced devices).
+
+One cheap cell end-to-end proves: production mesh builds, shardings apply,
+AOT compile succeeds, roofline terms emerge.  The full 32-cell x 2-mesh
+sweep runs via `python -m repro.launch.dryrun --sweep` (see EXPERIMENTS.md).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(1500)
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "olmoe-1b-7b", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=1400, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    out = tmp_path / "olmoe-1b-7b__decode_32k__single.json"
+    assert out.exists()
+    rec = json.loads(out.read_text())
+    rl = rec["roofline"]
+    assert rl["dominant"] in ("compute", "memory", "collective")
+    assert rl["t_memory_s"] > 0
+    assert rec["counted"]["flops"] > 0
+    assert rec["memory_analysis"]["temp_size_in_bytes"] > 0
+
+
+def test_roofline_parser_units():
+    from repro.launch import roofline
+
+    hlo = """
+  %ag = bf16[16,512,128]{2,1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar.1 = f32[1024]{0} all-reduce(%p1), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%p2), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[256,256]{1,0} collective-permute(%p3), source_target_pairs={{0,1}}
+"""
+    out = roofline.parse_collectives(hlo)
+    pk = out["per_kind"]
+    assert pk["all-gather"]["count"] == 1
+    ag_bytes = 16 * 512 * 128 * 2
+    assert pk["all-gather"]["result_bytes"] == ag_bytes
+    assert pk["all-gather"]["moved_bytes"] == pytest.approx(ag_bytes * 3 / 4)
+    assert pk["all-reduce"]["moved_bytes"] == pytest.approx(
+        2 * 1024 * 4 * 15 / 16
+    )
+    assert pk["reduce-scatter"]["moved_bytes"] == pytest.approx(64 * 4 * 1)
+    assert pk["collective-permute"]["count"] == 1
+    assert out["total_count"] == 4
+
+
+def test_model_flops_accounting():
+    from repro.configs.base import SHAPES
+    from repro.launch.roofline import model_flops
+    from repro.models import get_config
+
+    cfg = get_config("yi-9b")
+    train = model_flops(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+    dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert dec == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert model_flops(moe, SHAPES["train_4k"]) < 6 * moe.param_count() * 256 * 4096

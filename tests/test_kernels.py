@@ -1,0 +1,199 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("mkn", [(256, 128, 256), (512, 384, 128),
+                                     (130, 70, 90)])
+    @pytest.mark.parametrize("kwargs", [
+        dict(bm=128, bn=128, bk=128),
+        dict(bm=128, bn=128, bk=128, split_k=3),
+    ])
+    def test_vs_ref(self, dtype, mkn, kwargs):
+        from repro.kernels.matmul import ref
+        from repro.kernels.matmul.ops import matmul
+
+        m, k, n = mkn
+        a = _rand(jax.random.PRNGKey(0), (m, k), dtype)
+        b = _rand(jax.random.PRNGKey(1), (k, n), dtype)
+        got = matmul(a, b, **kwargs)
+        want = ref.matmul(a, b)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype],
+        )
+
+    def test_grid_orders_match(self):
+        from repro.kernels.matmul.matmul import matmul as kern
+
+        a = _rand(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+        b = _rand(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+        y1 = kern(a, b, bm=128, bn=128, bk=128, order="mnk")
+        y2 = kern(a, b, bm=128, bn=128, bk=128, order="nmk")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+    def test_engine_planned(self):
+        from repro.core import make_engine
+        from repro.kernels.matmul.ops import matmul
+
+        a = jnp.ones((200, 300), jnp.float32)
+        b = jnp.ones((300, 100), jnp.float32)
+        y = matmul(a, b, engine=make_engine())
+        np.testing.assert_allclose(np.asarray(y), 300.0, rtol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("cfg", [
+        (2, 4, 2, 256, 256, 64, True, 0),
+        (1, 8, 1, 128, 256, 32, True, 128),
+        (2, 4, 4, 100, 100, 64, False, 0),
+        (1, 6, 2, 192, 64, 128, False, 0),
+    ])
+    def test_vs_ref(self, dtype, cfg):
+        from repro.kernels.flash_attention import ref
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        b, hq, hkv, sq, skv, d, causal, off = cfg
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = _rand(ks[0], (b, hq, sq, d), dtype)
+        k = _rand(ks[1], (b, hkv, skv, d), dtype)
+        v = _rand(ks[2], (b, hkv, skv, d), dtype)
+        got = flash_attention(q, k, v, causal=causal, q_offset=off,
+                              bq=64, bkv=64)
+        want = ref.attention(q, k, v, causal=causal, q_offset=off)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype],
+        )
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("cfg", [
+        (2, 8, 2, 512, 64, 128, 1), (2, 8, 2, 512, 64, 128, 4),
+        (3, 4, 4, 300, 32, 64, 2), (1, 16, 1, 1024, 128, 256, 8),
+    ])
+    def test_vs_ref_ragged(self, dtype, cfg):
+        from repro.kernels.decode_attention import ref
+        from repro.kernels.decode_attention.ops import decode_attention
+
+        b, hq, hkv, s, d, bkv, splits = cfg
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        q = _rand(ks[0], (b, hq, d), dtype)
+        k = _rand(ks[1], (b, hkv, s, d), dtype)
+        v = _rand(ks[2], (b, hkv, s, d), dtype)
+        lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+        got = decode_attention(q, k, v, lengths, bkv=bkv, splits=splits)
+        want = ref.decode_attention(q, k, v, lengths)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype],
+        )
+
+
+class TestSSD:
+    @pytest.mark.parametrize("cfg", [
+        (2, 128, 4, 32, 2, 16, 32), (1, 100, 2, 64, 1, 32, 32),
+        (2, 64, 8, 32, 8, 16, 16),
+    ])
+    def test_vs_ref(self, cfg):
+        from repro.kernels.ssd import ref
+        from repro.kernels.ssd.ops import ssd
+
+        b, l, h, dh, g, ds, chunk = cfg
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        x = _rand(ks[0], (b, l, h, dh), jnp.float32)
+        dt = jax.nn.softplus(_rand(ks[1], (b, l, h), jnp.float32))
+        A = -jnp.exp(_rand(ks[2], (h,), jnp.float32))
+        B = _rand(ks[3], (b, l, g, ds), jnp.float32)
+        C = _rand(ks[4], (b, l, g, ds), jnp.float32)
+        D = _rand(ks[5], (h,), jnp.float32)
+        y, S = ssd(x, dt, A, B, C, D, chunk=chunk)
+        yr, Sr = ref.ssd(x, dt, A, B, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(Sr),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_decode_step_matches_scan(self):
+        from repro.kernels.ssd import ref
+        from repro.kernels.ssd.ssd import ssd_decode_step
+
+        b, h, dh, g, ds = 2, 4, 32, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(4), 6)
+        x = _rand(ks[0], (b, 1, h, dh), jnp.float32)
+        dt = jax.nn.softplus(_rand(ks[1], (b, 1, h), jnp.float32))
+        A = -jnp.exp(_rand(ks[2], (h,), jnp.float32))
+        B = _rand(ks[3], (b, 1, g, ds), jnp.float32)
+        C = _rand(ks[4], (b, 1, g, ds), jnp.float32)
+        S0 = _rand(ks[5], (b, h, ds, dh), jnp.float32)
+        yr, Sr = ref.ssd(x, dt, A, B, C, None, init_state=S0)
+        yd, Sd = ssd_decode_step(x[:, 0], dt[:, 0], A, B[:, 0], C[:, 0],
+                                 None, S0)
+        np.testing.assert_allclose(np.asarray(yd), np.asarray(yr[:, 0]),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(Sd), np.asarray(Sr),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestMoEGmm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("ecKn", [(4, 256, 128, 256), (8, 100, 200, 130)])
+    def test_vs_ref(self, dtype, ecKn):
+        from repro.kernels.moe_gmm import ref
+        from repro.kernels.moe_gmm.ops import grouped_matmul
+
+        e, c, k, n = ecKn
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        x = _rand(ks[0], (e, c, k), dtype)
+        w = _rand(ks[1], (e, k, n), dtype)
+        counts = jax.random.randint(ks[2], (e,), 0, c + 1).astype(jnp.int32)
+        got = grouped_matmul(x, w, counts, bm=64, bn=64, bk=64)
+        want = ref.grouped_matmul(x, w, counts)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype],
+        )
+
+    def test_empty_experts_write_zero(self):
+        from repro.kernels.moe_gmm.ops import grouped_matmul
+
+        x = jnp.ones((2, 64, 64), jnp.float32)
+        w = jnp.ones((2, 64, 64), jnp.float32)
+        counts = jnp.array([0, 64], jnp.int32)
+        y = grouped_matmul(x, w, counts, bm=64, bn=64, bk=64)
+        assert float(jnp.abs(y[0]).max()) == 0.0
+        assert float(jnp.abs(y[1]).min()) > 0.0
+
+
+class TestFusedNorm:
+    @pytest.mark.parametrize("kind", ["rms", "layer"])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(4, 100, 512), (300, 256)])
+    def test_vs_ref(self, kind, dtype, shape):
+        from repro.kernels.fused_norm import ref
+        from repro.kernels.fused_norm.ops import fused_norm
+
+        ks = jax.random.split(jax.random.PRNGKey(6), 4)
+        x = _rand(ks[0], shape, dtype)
+        w = _rand(ks[1], (shape[-1],), jnp.float32)
+        b = _rand(ks[2], (shape[-1],), jnp.float32) if kind == "layer" else None
+        r = _rand(ks[3], shape, dtype)
+        got = fused_norm(x, w, b, r, kind=kind)
+        want = ref.fused_norm(x, w, b, r, kind=kind)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype],
+        )

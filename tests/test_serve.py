@@ -1,0 +1,56 @@
+"""Serving engine tests: batched prefill+decode vs full-forward rollouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "qwen2.5-32b"])
+def test_greedy_decode_matches_full_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (8,), 0, cfg.vocab)
+    ).astype(np.int32)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    reqs = [Request(prompt=prompt, max_new_tokens=5),
+            Request(prompt=prompt, max_new_tokens=5)]
+    eng.run(reqs)
+    assert reqs[0].generated == reqs[1].generated  # same prompt, same slots
+
+    # Reference: greedy rollout with full forward each step.
+    toks = list(prompt)
+    out = []
+    for _ in range(5):
+        logits, _ = model.forward(params, jnp.asarray([toks], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    assert reqs[0].generated == out
+
+
+def test_engine_handles_multiple_rounds():
+    cfg = get_config("yi-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    prompt = np.arange(4, dtype=np.int32) % cfg.vocab
+    reqs = [Request(prompt=prompt, max_new_tokens=3) for _ in range(2)]
+    done = eng.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.generated) == 3 for r in done)
+
+
+def test_kv_policy_decision():
+    from repro.core import Policy, make_engine
+
+    eng = make_engine()
+    # Tiny per-layer KV (whisper cross K/V scale): resident.
+    assert eng.kv_policy(2 * 1024 * 1024) is Policy.RESIDENT
+    # Multi-GB decode cache: stream.
+    assert eng.kv_policy(4 * 1024**3) is Policy.STREAM
