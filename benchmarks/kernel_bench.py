@@ -1,6 +1,9 @@
 """Kernel microbenchmarks: CPU wall time of the jitted XLA-path ops and the
 modeled v5e time per policy (the TPU target numbers come from the roofline
-model; CPU wall time anchors relative costs only)."""
+model; CPU wall time anchors relative costs only).
+
+Modeled queries route through the memoized planner (``plan_cache``), so the
+per-shape policy ablation shares plans with the engine's own planning."""
 from __future__ import annotations
 
 import time
@@ -8,10 +11,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import hw
 from repro.core import StaticMode, make_engine
 from repro.core.characterize import attention_op, matmul_op
-from repro.core.cost_model import op_cost
 
 
 def _time(fn, *args, n=5):
@@ -24,17 +25,17 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def matmul_policy_ablation():
+def matmul_policy_ablation(plan_cache=None):
     """Modeled v5e time for a training GEMM under each policy + the
     engine's plan (paper technique applied to the TPU kernel)."""
     rows = []
-    eng = make_engine()
+    eng = make_engine(plan_cache=plan_cache)
     for (m, k, n) in [(4096, 4096, 4096), (8192, 8192, 1024),
                       (512, 8192, 51200)]:
         op = matmul_op(m, k, n, dtype="bf16")
         for mode in (StaticMode.UNCACHED, StaticMode.CACHER,
                      StaticMode.CACHERW):
-            c = op_cost(op, mode=mode, chip=hw.V5E)
+            c = eng.planner.cost(op, mode=mode)
             rows.append({
                 "name": f"kern_mm/{m}x{k}x{n}/{mode.value}",
                 "modeled_us": c.t_total * 1e6,
@@ -51,14 +52,14 @@ def matmul_policy_ablation():
     return rows
 
 
-def attention_policy_ablation():
+def attention_policy_ablation(plan_cache=None):
     rows = []
-    eng = make_engine()
+    eng = make_engine(plan_cache=plan_cache)
     for (b, hq, hkv, s, d) in [(8, 32, 4, 4096, 128), (1, 32, 8, 32768, 128)]:
         op = attention_op(b, hq, hkv, s, s, d)
         plan = eng.plan_op(op)
         for mode in (StaticMode.UNCACHED, StaticMode.CACHERW):
-            c = op_cost(op, mode=mode, chip=hw.V5E)
+            c = eng.planner.cost(op, mode=mode)
             rows.append({
                 "name": f"kern_attn/b{b}h{hq}s{s}/{mode.value}",
                 "modeled_us": c.t_total * 1e6,

@@ -3,34 +3,121 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is wall time
 where measured, modeled microseconds where analytical; ``derived`` packs the
 figure-specific metrics.
+
+``--json out.json`` additionally emits a machine-readable record:
+
+* ``rows``                 — every CSV row as a dict
+* ``sweep_wall_s``         — wall time of the full analytic policy sweep
+                             (17 workloads x modes x AB/rinse ablations +
+                             kernel ablations) on the batched/memoized path
+* ``seed_sweep_wall_s``    — the same queries through the seed per-query
+                             pure-Python path (``--no-compare-seed`` skips)
+* ``sweep_speedup``        — seed / fast
+* ``plan_cache_hit_rate``  + full ``plan_cache`` / ``sweep_table`` counters
+
+so BENCH_*.json files can track the planning-pipeline perf trajectory
+across PRs.  ``--analytic-only`` skips the measured (jit wall-time)
+benchmarks — useful for CI smoke runs.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import time
 
 
-def _emit(rows):
+def _emit(rows, out):
     for r in rows:
+        r = dict(r)
         name = r.pop("name")
         us = r.pop("us_per_call", r.pop("modeled_us", ""))
         derived = json.dumps(r, sort_keys=True) if r else ""
         print(f"{name},{us},{derived}")
+        out.append({"name": name, "us_per_call": us, **r})
 
 
-def main() -> None:
+def _kernel_rows(plan_cache):
+    from benchmarks import kernel_bench
+
+    rows = list(kernel_bench.matmul_policy_ablation(plan_cache=plan_cache))
+    rows.extend(kernel_bench.attention_policy_ablation(plan_cache=plan_cache))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results to PATH")
+    ap.add_argument("--analytic-only", action="store_true",
+                    help="skip measured (jit wall-time) benchmarks")
+    ap.add_argument("--no-compare-seed", action="store_true",
+                    help="skip timing the seed (unbatched) sweep path")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="repetitions per timed sweep (best-of, noise guard)")
+    args = ap.parse_args(argv)
+
     from benchmarks import figures, kernel_bench
+    from repro.core.planner import PlanCache
 
+    rows: list[dict] = []
     print("name,us_per_call,derived")
-    _emit(figures.fig4_5_characterization())
-    _emit(figures.fig6_7_policy_sweep())
-    _emit(figures.fig8_stalls())
-    _emit(figures.fig9_13_row_locality())
-    _emit(figures.fig10_12_optimizations())
-    _emit(figures.wall_time_small())
-    _emit(figures.characterization_table())
-    _emit(kernel_bench.matmul_policy_ablation())
-    _emit(kernel_bench.attention_policy_ablation())
-    _emit(kernel_bench.xla_wall_times())
+
+    # One-time numpy/einsum dispatch warmup so neither timed pass pays it.
+    from repro.core.characterize import matmul_op
+    from repro.core.sweep import sweep_ops
+
+    sweep_ops([matmul_op(128, 128, 128)])
+
+    # -- analytic sweep: batched + memoized path (timed, cold each rep) -----
+    sweep_wall_s = None
+    for _ in range(max(1, args.reps)):
+        plan_cache = PlanCache()
+        t0 = time.perf_counter()
+        backend = figures.FastBackend(plan_cache=plan_cache)
+        fast_rows = figures.analytic_rows(backend)
+        dt = time.perf_counter() - t0
+        sweep_wall_s = dt if sweep_wall_s is None else min(sweep_wall_s, dt)
+    _emit(fast_rows, rows)
+
+    t0 = time.perf_counter()
+    _emit(_kernel_rows(plan_cache), rows)
+    kernel_wall_s = time.perf_counter() - t0
+
+    # -- the same queries through the seed path (timed, rows discarded) -----
+    seed_sweep_wall_s = None
+    if not args.no_compare_seed:
+        for _ in range(max(1, args.reps)):
+            t0 = time.perf_counter()
+            figures.analytic_rows(figures.SeedBackend())
+            dt = time.perf_counter() - t0
+            seed_sweep_wall_s = (
+                dt if seed_sweep_wall_s is None else min(seed_sweep_wall_s, dt)
+            )
+
+    # -- measured wall-time benchmarks --------------------------------------
+    if not args.analytic_only:
+        _emit(figures.wall_time_small(), rows)
+        _emit(kernel_bench.xla_wall_times(), rows)
+
+    stats = backend.stats()
+    summary = {
+        "sweep_wall_s": sweep_wall_s,
+        "kernel_wall_s": kernel_wall_s,
+        "seed_sweep_wall_s": seed_sweep_wall_s,
+        "sweep_speedup": (
+            seed_sweep_wall_s / sweep_wall_s if seed_sweep_wall_s else None
+        ),
+        "plan_cache_hit_rate": stats["hit_rate"],
+        "plan_cache": {k: v for k, v in stats.items() if k != "sweep_table"},
+        "sweep_table": stats["sweep_table"],
+    }
+    print(f"sweep_wall_s,{sweep_wall_s * 1e6:.1f},"
+          + json.dumps({k: v for k, v in summary.items()
+                        if k not in ("plan_cache", "sweep_table")}))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, **summary}, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@ Public API:
     cost_model.{op_cost, workload_cost, adaptive_assignment}
     allocator.plan_op, rinse.DirtyIndex, predictor.PolicyPredictor
     engine.{CachePolicyEngine, make_engine}
+    planner.{PlanCache, Planner, fingerprint_op}
+    sweep.{sweep_ops, optimal_assignment, SweepTable}
 """
 from repro.core.policy import (  # noqa: F401
     Assignment,
@@ -19,3 +21,5 @@ from repro.core.policy import (  # noqa: F401
     static_assignment,
 )
 from repro.core.engine import CachePolicyEngine, EngineConfig, make_engine  # noqa: F401
+from repro.core.planner import PlanCache, Planner, fingerprint_op  # noqa: F401
+from repro.core.sweep import SweepTable, optimal_assignment, sweep_ops  # noqa: F401

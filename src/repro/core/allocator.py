@@ -18,7 +18,13 @@ import dataclasses
 
 from repro import hw
 from repro.core import rinse as rinse_mod
-from repro.core.policy import Assignment, KernelPlan, OpSpec, Policy
+from repro.core.policy import (
+    Assignment,
+    KernelPlan,
+    OpSpec,
+    Policy,
+    reuse_density,
+)
 
 MIN_BLOCK = 128          # MXU-aligned floor; shrinking below this is a "stall"
 HARD_MIN_BLOCK = 8       # absolute floor (vector sublane)
@@ -64,26 +70,28 @@ def _vmem_claim(
     eb = hw.dtype_bytes(op.dtype)
     per: dict[str, int] = {}
     kind = op.kind
+    if kind in ("matmul", "conv2d"):
+        tiles = {
+            "a": block["bm"] * block["bk"],
+            "b": block["bk"] * block["bn"],
+            "out": block["bm"] * block["bn"],
+        }
+        default_tile = block["bm"] * block["bn"]
+    elif kind == "attention":
+        d = op.meta["head_dim"]
+        tiles = {
+            "q": block["bq"] * d,
+            "k": block["bkv"] * d,
+            "v": block["bkv"] * d,
+            "out": block["bq"] * d,
+        }
+        default_tile = None
+    else:
+        tiles = {}
+        default_tile = block["be"]
     for o in op.operands:
         pol = assignment[o.name]
-        if kind in ("matmul", "conv2d"):
-            tiles = {
-                "a": block["bm"] * block["bk"],
-                "b": block["bk"] * block["bn"],
-                "out": block["bm"] * block["bn"],
-            }
-            tile_elems = tiles.get(o.name, block["bm"] * block["bn"])
-        elif kind == "attention":
-            d = op.meta["head_dim"]
-            tiles = {
-                "q": block["bq"] * d,
-                "k": block["bkv"] * d,
-                "v": block["bkv"] * d,
-                "out": block["bq"] * d,
-            }
-            tile_elems = tiles[o.name]
-        else:
-            tile_elems = block["be"]
+        tile_elems = tiles.get(o.name, default_tile)
         tile_elems = min(tile_elems, max(1, o.unique_bytes // eb))
         if o.is_output:
             if pol is Policy.RESIDENT_ACCUM:
@@ -110,10 +118,7 @@ def plan_op(
     budget = chip.vmem_budget
     demotions: list[str] = []
     shrink_events = 0
-
-    def density(o) -> float:
-        return (o.touched_bytes_stream - o.unique_bytes) / max(o.window_bytes, 1)
-
+    density = reuse_density
     while True:
         claim, per = _vmem_claim(op, assignment, block)
         if claim <= budget:

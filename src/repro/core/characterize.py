@@ -11,12 +11,17 @@ operand is fetched.
 """
 from __future__ import annotations
 
+import dataclasses
+
+import numpy as np
+
 from repro import hw
 from repro.core.policy import (
     OperandProfile,
     OpSpec,
     StaticMode,
     WorkloadClass,
+    reuse_density,
     static_assignment,
 )
 
@@ -265,6 +270,64 @@ def conv2d_op(
 
 
 # ---------------------------------------------------------------------------
+# Vectorized operand tensors (consumed by core.sweep)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OpTensors:
+    """Per-operand byte/flop arrays for one op, precomputed once.
+
+    Inputs are stored in *residency-priority order* (reuse density
+    descending) — the order ``plan_residency`` allocates the VMEM budget —
+    so the sweep kernel can realize partial residency with a cumulative
+    sum instead of re-sorting per assignment.
+    """
+
+    in_names: tuple[str, ...]        # density-ordered
+    in_unique: np.ndarray            # [I] float64
+    in_touched: np.ndarray           # [I]
+    in_window: np.ndarray            # [I]
+    out_names: tuple[str, ...]
+    out_unique: np.ndarray           # [O]
+    out_writethrough: np.ndarray     # [O] unique * max(1, 2*revisits - 1)
+    out_contiguity: np.ndarray       # [O]
+    flops: float
+    achieved_eff: float | None       # meta override, None -> calib default
+
+    @property
+    def n_inputs(self) -> int:
+        return len(self.in_names)
+
+    @property
+    def n_outputs(self) -> int:
+        return len(self.out_names)
+
+
+def operand_tensors(op: OpSpec) -> OpTensors:
+    """Build the sweep kernel's array view of one op (calib-independent)."""
+    ins = sorted(op.inputs, key=reuse_density, reverse=True)
+    outs = op.outputs
+    eff = op.meta.get("achieved_eff")
+    return OpTensors(
+        in_names=tuple(o.name for o in ins),
+        in_unique=np.array([o.unique_bytes for o in ins], dtype=np.float64),
+        in_touched=np.array(
+            [o.touched_bytes_stream for o in ins], dtype=np.float64
+        ),
+        in_window=np.array([o.window_bytes for o in ins], dtype=np.float64),
+        out_names=tuple(o.name for o in outs),
+        out_unique=np.array([o.unique_bytes for o in outs], dtype=np.float64),
+        out_writethrough=np.array(
+            [o.unique_bytes * max(1, 2 * o.revisits - 1) for o in outs],
+            dtype=np.float64,
+        ),
+        out_contiguity=np.array([o.contiguity for o in outs], dtype=np.float64),
+        flops=op.flops,
+        achieved_eff=None if eff is None else float(eff),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Workload classification (paper §VI.A)
 # ---------------------------------------------------------------------------
 
@@ -272,13 +335,26 @@ def classify_workload(
     ops: list[OpSpec],
     chip: hw.Chip = hw.V5E,
     threshold: float = 0.05,
+    memoize: bool = True,
+    plan_cache=None,
+    cost_fn=None,
 ) -> WorkloadClass:
-    """Reproduce the paper's 3-way grouping from modeled policy sensitivity."""
+    """Reproduce the paper's 3-way grouping from modeled policy sensitivity.
+
+    ``cost_fn(ops, mode) -> CostBreakdown`` overrides the cost evaluator
+    (e.g. a vectorized :class:`~repro.core.sweep.SweepTable`); the default
+    is the scalar (memoized) ``workload_cost``.
+    """
     from repro.core.cost_model import workload_cost  # local: avoid import cycle
+
+    if cost_fn is None:
+        def cost_fn(ops, mode):
+            return workload_cost(ops, mode=mode, chip=chip, launches_per_op=0,
+                                 memoize=memoize, plan_cache=plan_cache)
 
     times = {
         # Launch overhead excluded: classification concerns memory behaviour.
-        mode: workload_cost(ops, mode=mode, chip=chip, launches_per_op=0).t_total
+        mode: cost_fn(ops, mode).t_total
         for mode in (StaticMode.UNCACHED, StaticMode.CACHER, StaticMode.CACHERW)
     }
     t_unc = times[StaticMode.UNCACHED]

@@ -32,6 +32,7 @@ from repro.core.policy import (
     OpSpec,
     Policy,
     StaticMode,
+    reuse_density,
     static_assignment,
 )
 
@@ -146,19 +147,15 @@ def plan_residency(
     budget = max(budget, 0)
 
     resident = [o for o in op.inputs if assignment[o.name] is Policy.RESIDENT]
-    # Reuse density: traffic saved per resident byte.
-    def density(o: OperandProfile) -> float:
-        return (o.touched_bytes_stream - o.unique_bytes) / max(o.window_bytes, 1)
-
     realized: dict[str, float] = {}
     claimed = chip.vmem_budget - budget
-    for o in sorted(resident, key=density, reverse=True):
+    for o in sorted(resident, key=reuse_density, reverse=True):
         take = min(o.window_bytes, budget)
         realized[o.name] = take / max(o.window_bytes, 1)
         budget -= take
         claimed += take
     demotions = tuple(
-        name for name, frac in realized.items() if frac < CALIB.demote_threshold
+        name for name, frac in realized.items() if frac < calib.demote_threshold
     )
     return ResidencyPlan(realized=realized, vmem_claimed=claimed, demotions=demotions)
 
@@ -255,10 +252,7 @@ def adaptive_assignment(
     # Residency candidates, densest first, greedily while they fit.  A
     # promoted operand trades its streaming double-buffer for its window.
     cands = [o for o in op.inputs if o.reuse_factor > 1.1]
-    cands.sort(
-        key=lambda o: (o.touched_bytes_stream - o.unique_bytes) / max(o.window_bytes, 1),
-        reverse=True,
-    )
+    cands.sort(key=reuse_density, reverse=True)
     for o in cands:
         extra = o.window_bytes - 2 * min(o.unique_bytes, tile)
         if extra <= budget:
@@ -275,24 +269,48 @@ def workload_cost(
     rinse: bool | None = None,
     launches_per_op: int = 1,
     calib: CostCalib = CALIB,
+    search: str = "exact",
+    memoize: bool = True,
+    plan_cache=None,
 ) -> CostBreakdown:
     """Sum of op costs under a static mode or the adaptive engine.
 
     Static modes default to the paper's *baseline* machine behaviour:
     blocking allocation, no rinse.  ADAPTIVE defaults to AB+CR+PCby on.
+
+    ``search`` picks the adaptive-mode assignment: ``"exact"`` (lattice
+    argmin via ``core.sweep``, never worse than greedy) or ``"greedy"``
+    (the original ``adaptive_assignment`` walk).  ``memoize`` routes
+    plan/cost evaluation through the :class:`~repro.core.planner.PlanCache`
+    (``plan_cache``, or the shared default) — cached results are
+    bit-identical to cold ones, so this only changes wall time.
     """
     adaptive = mode is StaticMode.ADAPTIVE
     ab = adaptive if allocation_bypass is None else allocation_bypass
     rn = adaptive if rinse is None else rinse
+    planner = None
+    if memoize or (adaptive and search == "exact"):
+        from repro.core.planner import Planner  # local: avoid import cycle
+
+        planner = Planner(chip=chip, calib=calib, cache=plan_cache)
     total = CostBreakdown()
     for op in ops:
-        assignment = (
-            adaptive_assignment(op, chip, calib)
-            if adaptive
-            else static_assignment(op, mode)
-        )
-        total.add(
-            op_cost(
+        if adaptive:
+            if search == "exact":
+                assignment = planner.optimal_assignment(
+                    op, allocation_bypass=ab, rinse=rn
+                )
+            else:
+                assignment = adaptive_assignment(op, chip, calib)
+        else:
+            assignment = static_assignment(op, mode)
+        if memoize:
+            bd = planner.cost(
+                op, assignment=assignment, allocation_bypass=ab, rinse=rn,
+                launches=launches_per_op,
+            )
+        else:
+            bd = op_cost(
                 op,
                 assignment=assignment,
                 chip=chip,
@@ -301,5 +319,5 @@ def workload_cost(
                 launches=launches_per_op,
                 calib=calib,
             )
-        )
+        total.add(bd)
     return total

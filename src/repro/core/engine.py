@@ -5,6 +5,12 @@ allocate (AB non-blocking VMEM planner) -> rinse (grid/flush order).
 Output: a :class:`KernelPlan` consumed by the Pallas kernels, plus modeled
 cost for reporting/feedback.
 
+Planning is memoized (DESIGN.md §3): every plan/cost query routes through a
+:class:`~repro.core.planner.Planner`, so an op that launches repeatedly
+(RNN cells, each transformer layer) plans once and hits the
+:class:`~repro.core.planner.PlanCache` thereafter.  ``plan_stats()``
+exposes the hit/miss counters.
+
 The engine also owns the trainer-level activation policy (remat) and is the
 single switch between the paper's static baselines and the adaptive mode.
 """
@@ -13,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 
 from repro import hw
-from repro.core import allocator, cost_model, remat
+from repro.core import allocator, remat
+from repro.core.planner import PlanCache, Planner
 from repro.core.policy import (
     Assignment,
     KernelPlan,
@@ -42,33 +49,39 @@ class CachePolicyEngine:
         self,
         config: EngineConfig | None = None,
         predictor: PolicyPredictor | None = None,
+        plan_cache: PlanCache | None = None,
     ):
         self.config = config or EngineConfig()
         self.chip = self.config.chip
-        self.predictor = predictor or PolicyPredictor(chip=self.chip)
+        self.planner = Planner(chip=self.chip, cache=plan_cache)
+        self.predictor = predictor or PolicyPredictor(
+            chip=self.chip, planner=self.planner
+        )
 
     # -- per-op planning ----------------------------------------------------
 
     def assign(self, op: OpSpec) -> Assignment:
         if self.config.mode is StaticMode.ADAPTIVE:
-            return self.predictor.predict(op)
+            return self.predictor.predict(
+                op,
+                allocation_bypass=self.config.allocation_bypass,
+                rinse=self.config.rinse,
+            )
         return static_assignment(op, self.config.mode)
 
     def plan_op(self, op: OpSpec) -> KernelPlan:
-        return allocator.plan_op(
+        return self.planner.plan(
             op,
             self.assign(op),
-            chip=self.chip,
             allocation_bypass=self.config.allocation_bypass,
             rinse=self.config.rinse,
         )
 
     def cost(self, op: OpSpec, plan: KernelPlan | None = None):
         plan = plan or self.plan_op(op)
-        breakdown = cost_model.op_cost(
+        breakdown = self.planner.cost(
             op,
             assignment=plan.assignment,
-            chip=self.chip,
             allocation_bypass=self.config.allocation_bypass,
             rinse=self.config.rinse,
         )
@@ -83,11 +96,20 @@ class CachePolicyEngine:
     def feedback(self, op: OpSpec, plan: KernelPlan, measured_time: float) -> None:
         """Close the loop: compare against the bypass baseline and update
         the predictor's confidence counters."""
-        baseline = cost_model.op_cost(
-            op, mode=StaticMode.UNCACHED, chip=self.chip
+        baseline = self.planner.cost(
+            op, mode=StaticMode.UNCACHED
         ).t_total
         benefit = (baseline - measured_time) / max(baseline, 1e-30)
         self.predictor.update(op, plan.assignment, benefit)
+
+    # -- cache visibility ----------------------------------------------------
+
+    @property
+    def plan_cache(self) -> PlanCache:
+        return self.planner.cache
+
+    def plan_stats(self) -> dict:
+        return self.planner.stats()
 
     # -- trainer-level activation policy ------------------------------------
 
@@ -115,6 +137,7 @@ def make_engine(
     allocation_bypass: bool = True,
     rinse: bool = True,
     chip: str = "tpu-v5e",
+    plan_cache: PlanCache | None = None,
 ) -> CachePolicyEngine:
     return CachePolicyEngine(
         EngineConfig(
@@ -122,5 +145,6 @@ def make_engine(
             allocation_bypass=allocation_bypass,
             rinse=rinse,
             chip_name=chip,
-        )
+        ),
+        plan_cache=plan_cache,
     )

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+import types
 from typing import Any
 
 
@@ -95,6 +96,13 @@ class OperandProfile:
         return self.touched_bytes_stream
 
 
+def reuse_density(o: OperandProfile) -> float:
+    """Traffic saved per resident byte — the single residency-priority
+    metric shared by the greedy planners and the vectorized sweep (their
+    orderings must agree exactly for the sweep==scalar invariants)."""
+    return (o.touched_bytes_stream - o.unique_bytes) / max(o.window_bytes, 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
     """Shape-level description of one operator instance (a kernel launch)."""
@@ -105,6 +113,16 @@ class OpSpec:
     dtype: str = "bf16"
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
     name: str = ""
+
+    def __post_init__(self):
+        # Freeze meta: the plan cache fingerprints ops by structural content
+        # (including meta), so in-place mutation would silently alias stale
+        # cache entries.  A read-only view makes it fail loudly instead;
+        # derive variants with dataclasses.replace(op, meta={...}).
+        if not isinstance(self.meta, types.MappingProxyType):
+            object.__setattr__(
+                self, "meta", types.MappingProxyType(dict(self.meta))
+            )
 
     def operand(self, name: str) -> OperandProfile:
         for o in self.operands:

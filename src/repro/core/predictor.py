@@ -5,9 +5,10 @@ predictor [54].  On a statically-scheduled TPU the natural "PC" is the *op
 site*: (op kind, operand role, size class, reuse class, dtype) — every
 texturally distinct access site in the traced program maps to one key.
 
-The predictor is seeded from the analytical cost model (cache exactly the
-accesses whose reuse is realizable), then updated with observed benefit via
-saturating confidence counters, mirroring the hardware predictor's
+The predictor is seeded from the analytical cost model — the *exact*
+lattice optimum of ``core.sweep`` (never worse than the greedy walk;
+DESIGN.md §3) — then updated with observed benefit via saturating
+confidence counters, mirroring the hardware predictor's
 increment/decrement behaviour.  State persists to JSON — the software
 equivalent of the paper's own methodology of reusing MIOpen's tuned-kernel
 database across runs.
@@ -20,7 +21,7 @@ import math
 import os
 
 from repro import hw
-from repro.core.cost_model import CALIB, CostCalib, adaptive_assignment
+from repro.core.cost_model import CALIB, CostCalib
 from repro.core.policy import Assignment, OperandProfile, OpSpec, Policy
 
 _CONF_MAX = 3    # 2-bit saturating counter, as in [54]
@@ -70,15 +71,34 @@ class _Entry:
 class PolicyPredictor:
     """Per-site policy table with saturating-counter feedback."""
 
-    def __init__(self, chip: hw.Chip = hw.V5E, calib: CostCalib = CALIB):
+    def __init__(
+        self,
+        chip: hw.Chip = hw.V5E,
+        calib: CostCalib = CALIB,
+        planner=None,
+    ):
         self.chip = chip
         self.calib = calib
         self.table: dict[SiteKey, _Entry] = {}
+        if planner is None:
+            from repro.core.planner import Planner  # local: avoid cycle
+
+            planner = Planner(chip=chip, calib=calib)
+        self.planner = planner
 
     # -- prediction ---------------------------------------------------------
 
-    def predict(self, op: OpSpec) -> Assignment:
-        seed = adaptive_assignment(op, self.chip, self.calib)
+    def predict(
+        self,
+        op: OpSpec,
+        allocation_bypass: bool = True,
+        rinse: bool = True,
+    ) -> Assignment:
+        """Site-table prediction, seeded from the lattice optimum under the
+        machine model actually in force (AB/rinse knobs)."""
+        seed = self.planner.optimal_assignment(
+            op, allocation_bypass=allocation_bypass, rinse=rinse
+        )
         out: Assignment = {}
         for o in op.operands:
             key = SiteKey.from_profile(op, o)

@@ -21,7 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import hw
 from repro.configs.base import ModelConfig
+from repro.core import CachePolicyEngine, make_engine
+from repro.core.characterize import attention_op
 from repro.models import build_model
 
 
@@ -40,19 +43,53 @@ def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
-                 max_len: int, extras: dict[str, Any] | None = None):
+                 max_len: int, extras: dict[str, Any] | None = None,
+                 policy_engine: CachePolicyEngine | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.extras = extras or {}
+        self.policy = policy_engine or make_engine()
+        self.kv_residency = self.policy.kv_policy(self._kv_bytes_per_layer())
+        # Decode-attention plan, memoized in the policy engine's PlanCache:
+        # one lattice search + allocation per serve process, a cache hit for
+        # every subsequent engine (re-plans are the serve-time hot path).
+        self.decode_plan = None
+        if cfg.n_heads and cfg.head_dim_:
+            self.decode_plan = self.policy.plan_op(attention_op(
+                batch_slots, cfg.n_heads, max(1, cfg.n_kv_heads),
+                1, max_len, cfg.head_dim_, causal=False, name="serve_decode",
+            ))
         self.cache = self.model.init_cache(
             params, batch=batch_slots, max_len=max_len, **self.extras
         )
         self._decode = jax.jit(self.model.decode_step)
         self._prefill = jax.jit(self.model.prefill)
         self.live: dict[int, Request] = {}
+
+    def _kv_bytes_per_layer(self) -> int:
+        kv_heads = max(1, self.cfg.n_kv_heads)
+        return (2 * self.slots * self.max_len * kv_heads
+                * self.cfg.head_dim_ * hw.dtype_bytes(self.cfg.dtype))
+
+    def policy_report(self) -> dict:
+        """Serving-side policy decisions (DESIGN.md §5) + planner counters."""
+        report = {
+            "kv_bytes_per_layer": self._kv_bytes_per_layer(),
+            "kv_residency": self.kv_residency.value,
+            "plan_cache": self.policy.plan_stats(),
+        }
+        if self.decode_plan is not None:
+            report["decode_attention"] = {
+                "assignment": {
+                    k: v.value for k, v in self.decode_plan.assignment.items()
+                },
+                "vmem_bytes": self.decode_plan.vmem_bytes,
+                "grid_order": list(self.decode_plan.grid_order),
+            }
+        return report
 
     # NOTE on the single-cursor cache: the uniform-cursor layout keeps the
     # dry-run/step functions static-shaped; slots admitted together share a

@@ -37,8 +37,7 @@ MB = 1024 * 1024
 
 
 def _with_eff(op: OpSpec, eff: float) -> OpSpec:
-    object.__setattr__(op, "meta", {**op.meta, "achieved_eff": eff})
-    return op
+    return dataclasses.replace(op, meta={**op.meta, "achieved_eff": eff})
 
 
 @dataclasses.dataclass
@@ -153,7 +152,7 @@ def build_suite() -> dict[str, Workload]:
     # BwBN's dgamma/dbeta partial sums revisit the output: coalescible.
     ops = list(bwbn.operands)
     out = dataclasses.replace(ops[-1], revisits=4)
-    object.__setattr__(bwbn, "operands", (*ops[:-1], out))
+    bwbn = dataclasses.replace(bwbn, operands=(*ops[:-1], out))
     add("BwBN", [bwbn], 1, 5.88, C.REUSE_SENSITIVE)
     add("FwLRN",
         [window_op(600_000_000, 5, 1, reuse_distance_elems=120_000_000,
@@ -173,7 +172,7 @@ def build_suite() -> dict[str, Workload]:
         unique_bytes=ops[0].unique_bytes,          # dx is input-sized
         touched_bytes_stream=ops[0].unique_bytes,
     )
-    object.__setattr__(bwpool, "operands", (*ops[:-1], out))
+    bwpool = dataclasses.replace(bwpool, operands=(*ops[:-1], out))
     add("BwPool", [bwpool], 1, 252, C.REUSE_SENSITIVE)
 
     # --- softmax ------------------------------------------------------------

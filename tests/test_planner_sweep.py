@@ -1,0 +1,394 @@
+"""Planner/sweep invariants (deterministic — no hypothesis needed).
+
+Covers the batched-memoized planning pipeline:
+
+* cached plans/costs are bit-identical to cold-path plans/costs,
+* the vectorized lattice sweep reproduces the scalar cost model,
+* the exact lattice search is never worse than the greedy
+  ``adaptive_assignment`` on the full 17-workload suite,
+* paper §VI.A classifications are unchanged by the new machinery,
+* the PlanCache amortizes repeated launches (RNN suites, transformer
+  layers) with a high hit rate.
+"""
+import itertools
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import hw
+from repro.core import Policy, StaticMode, make_engine
+from repro.core.characterize import (
+    elementwise_op,
+    matmul_op,
+    rowwise_op,
+)
+from repro.core.cost_model import (
+    CALIB,
+    CostCalib,
+    adaptive_assignment,
+    op_cost,
+    plan_residency,
+    workload_cost,
+)
+from repro.core.planner import PlanCache, Planner, fingerprint_op
+from repro.core.policy import static_assignment
+from repro.core.sweep import SweepTable, optimal_assignment, sweep_ops
+from repro.workloads.suite import SUITE
+
+CHIPS = (hw.PAPER_GPU, hw.V5E)
+STATIC = (StaticMode.UNCACHED, StaticMode.CACHER, StaticMode.CACHERW)
+
+
+def _suite_ops():
+    return [op for w in SUITE.values() for op in w.ops]
+
+
+# ---------------------------------------------------------------------------
+# Satellite (a): cached == cold, across modes and chips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chip", CHIPS, ids=lambda c: c.name)
+def test_cached_costs_identical_to_cold_path(chip):
+    planner = Planner(chip=chip, cache=PlanCache())
+    for op in _suite_ops():
+        for mode in STATIC:
+            a = static_assignment(op, mode)
+            for ab, rn in itertools.product((False, True), repeat=2):
+                cold = op_cost(op, assignment=a, chip=chip,
+                               allocation_bypass=ab, rinse=rn, launches=2)
+                first = planner.cost(op, assignment=a, allocation_bypass=ab,
+                                     rinse=rn, launches=2)
+                hit = planner.cost(op, assignment=a, allocation_bypass=ab,
+                                   rinse=rn, launches=2)
+                assert cold == first == hit, (op.name, mode, ab, rn)
+
+
+@pytest.mark.parametrize("chip", CHIPS, ids=lambda c: c.name)
+def test_cached_plans_identical_to_cold_path(chip):
+    from repro.core import allocator
+
+    planner = Planner(chip=chip, cache=PlanCache())
+    for op in _suite_ops():
+        for mode in STATIC:
+            a = static_assignment(op, mode)
+            cold = allocator.plan_op(op, a, chip=chip)
+            cached = planner.plan(op, a)
+            again = planner.plan(op, a)
+            for plan in (cached, again):
+                assert plan.assignment == cold.assignment
+                assert plan.block == cold.block
+                assert plan.grid_order == cold.grid_order
+                assert plan.vmem_bytes == cold.vmem_bytes
+                assert plan.demotions == cold.demotions
+                assert plan.shrink_events == cold.shrink_events
+
+
+def test_workload_cost_memoized_identical():
+    for name, w in SUITE.items():
+        for mode in (*STATIC, StaticMode.ADAPTIVE):
+            cold = workload_cost(w.ops, mode=mode, chip=hw.PAPER_GPU,
+                                 memoize=False)
+            warm = workload_cost(w.ops, mode=mode, chip=hw.PAPER_GPU,
+                                 plan_cache=PlanCache())
+            assert cold == warm, (name, mode)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized sweep == scalar reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chip", CHIPS, ids=lambda c: c.name)
+def test_batch_sweep_matches_scalar_cost_model(chip):
+    ops = _suite_ops()
+    bs = sweep_ops(ops, chip=chip)
+    fields = ("t_compute", "t_hbm", "t_overhead", "t_total", "read_bytes",
+              "write_bytes", "write_contiguity", "stall_frac")
+    for i, op in enumerate(ops):
+        for mode in STATIC:
+            for ab, rn in itertools.product((False, True), repeat=2):
+                ref = op_cost(op, mode=mode, chip=chip, allocation_bypass=ab,
+                              rinse=rn, launches=1)
+                got = bs.breakdown(i, mode=mode, allocation_bypass=ab,
+                                   rinse=rn, launches=1)
+                for f in fields:
+                    a, b = getattr(ref, f), getattr(got, f)
+                    assert abs(a - b) <= 1e-9 * max(abs(a), 1e-30), (
+                        op.name, mode, ab, rn, f, a, b
+                    )
+                assert ref.demotions == got.demotions
+                assert ref.vmem_claimed == got.vmem_claimed
+
+
+# ---------------------------------------------------------------------------
+# Satellite (b): exact lattice search never worse than greedy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chip", CHIPS, ids=lambda c: c.name)
+def test_exact_search_never_worse_than_greedy_on_suite(chip):
+    for name, w in SUITE.items():
+        for op in w.ops:
+            for ab, rn in itertools.product((False, True), repeat=2):
+                greedy = adaptive_assignment(op, chip)
+                exact = optimal_assignment(op, chip=chip,
+                                           allocation_bypass=ab, rinse=rn)
+                t_g = op_cost(op, assignment=greedy, chip=chip,
+                              allocation_bypass=ab, rinse=rn,
+                              launches=0).t_total
+                t_e = op_cost(op, assignment=exact, chip=chip,
+                              allocation_bypass=ab, rinse=rn,
+                              launches=0).t_total
+                assert t_e <= t_g, (name, op.name, ab, rn, t_e, t_g)
+
+
+def test_adaptive_workload_cost_never_worse_than_best_static():
+    """With the exact search, the paper-headline bound holds with NO slack
+    (the greedy path needed a 5% tolerance)."""
+    for name, w in SUITE.items():
+        times = {
+            mode: workload_cost(w.ops, mode=mode, chip=hw.PAPER_GPU,
+                                launches_per_op=0).t_total
+            for mode in (*STATIC, StaticMode.ADAPTIVE)
+        }
+        best = min(times[m] for m in STATIC)
+        assert times[StaticMode.ADAPTIVE] <= best, (name, times)
+
+
+# ---------------------------------------------------------------------------
+# Classification unchanged (paper §VI.A)
+# ---------------------------------------------------------------------------
+
+def test_suite_classification_unchanged():
+    from repro.core.characterize import classify_workload
+
+    mismatches = {
+        name: (w.expected.value,
+               classify_workload(w.ops, chip=hw.PAPER_GPU).value)
+        for name, w in SUITE.items()
+        if classify_workload(w.ops, chip=hw.PAPER_GPU) != w.expected
+    }
+    assert not mismatches, mismatches
+
+
+def test_sweep_table_classification_matches_scalar():
+    from repro.core.characterize import classify_workload
+
+    table = SweepTable(chip=hw.PAPER_GPU)
+    for name, w in SUITE.items():
+        via_table = classify_workload(
+            w.ops, chip=hw.PAPER_GPU,
+            cost_fn=lambda ops, mode: table.workload_cost(
+                ops, mode=mode, launches_per_op=0
+            ),
+        )
+        assert via_table == w.expected, name
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: plan_residency honours the caller's calibration
+# ---------------------------------------------------------------------------
+
+def test_plan_residency_uses_caller_calib():
+    from repro.core.characterize import window_op
+
+    # An op whose resident window only partially fits -> 0 < realized < 1.
+    op = window_op(1 << 23, 5, 1, reuse_distance_elems=1 << 22, dtype="f32")
+    a = static_assignment(op, StaticMode.CACHER)
+    base = plan_residency(op, a, hw.PAPER_GPU, CALIB)
+    frac = min(base.realized.values())
+    assert 0.0 < frac < 1.0
+    # demote_threshold below every realized fraction -> no demotions;
+    # above -> all resident operands demoted.  Pre-fix, the module-global
+    # CALIB.demote_threshold silently overrode both.
+    lo = CostCalib(demote_threshold=frac * 0.5)
+    hi = CostCalib(demote_threshold=1.1)
+    assert plan_residency(op, a, hw.PAPER_GPU, lo).demotions == ()
+    assert len(plan_residency(op, a, hw.PAPER_GPU, hi).demotions) == len(
+        base.realized
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints + OpSpec hygiene
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_shared_by_equal_ops_and_sensitive_to_meta():
+    a = matmul_op(512, 512, 512)
+    b = matmul_op(512, 512, 512, name="other_name")   # name excluded
+    assert fingerprint_op(a) == fingerprint_op(b)
+    import dataclasses
+
+    c = dataclasses.replace(a, meta={**a.meta, "achieved_eff": 0.3})
+    assert fingerprint_op(a) != fingerprint_op(c)
+    d = matmul_op(512, 512, 1024)
+    assert fingerprint_op(a) != fingerprint_op(d)
+
+
+def test_suite_ops_not_mutated_in_place():
+    """_with_eff / operand patches must produce new OpSpecs (frozen
+    semantics), so fingerprints can never go stale."""
+    from repro.workloads.suite import build_suite
+
+    s1 = build_suite()
+    s2 = build_suite()
+    for name in s1:
+        for o1, o2 in zip(s1[name].ops, s2[name].ops):
+            assert fingerprint_op(o1) == fingerprint_op(o2)
+    assert s1["FwFc"].ops[0].meta["achieved_eff"] == 0.75
+    assert s1["BwBN"].ops[0].operands[-1].revisits == 4
+
+
+# ---------------------------------------------------------------------------
+# Cache amortization: repeated launches plan once
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_amortizes_rnn_launches():
+    eng = make_engine(plan_cache=PlanCache())
+    w = SUITE["FwBwLSTM"]
+    for i in range(w.launches):
+        op = w.ops[i % len(w.ops)]
+        plan = eng.plan_op(op)
+        eng.cost(op, plan)
+    stats = eng.plan_stats()
+    assert stats["hit_rate"] > 0.8, stats
+
+
+def test_plan_cache_amortizes_transformer_layers():
+    from repro.configs.base import SHAPES
+    from repro.launch.dryrun import plan_model_policies
+    from repro.models import get_config
+
+    report = plan_model_policies(get_config("yi-9b"), SHAPES["decode_32k"])
+    assert report["plan_cache_hit_rate"] > 0.8, report
+    assert report["ops_planned"] == report["layers"] * report["ops_per_layer"]
+
+
+def test_launch_plan_returns_consistent_cached_objects():
+    planner = Planner(chip=hw.V5E, cache=PlanCache())
+    op = rowwise_op(512, 2048, passes=3)
+    p1, c1 = planner.launch_plan(op)
+    p2, c2 = planner.launch_plan(op)
+    assert p1 is p2 and c1 is c2          # shared cached instances
+    ref = op_cost(op, assignment=p1.assignment, chip=hw.V5E, launches=1)
+    assert c1 == ref
+
+
+# ---------------------------------------------------------------------------
+# Engine / serve integration
+# ---------------------------------------------------------------------------
+
+def test_engine_cost_matches_pre_cache_semantics():
+    """Engine cost through the planner == direct op_cost + MXU fold."""
+    from repro.core import allocator
+
+    eng = make_engine(plan_cache=PlanCache())
+    op = matmul_op(2048, 4096, 1024)
+    plan = eng.plan_op(op)
+    got = eng.cost(op, plan)
+    ref = op_cost(op, assignment=plan.assignment, chip=eng.chip)
+    ref.t_compute /= allocator.mxu_efficiency(plan, eng.chip)
+    ref.t_total = max(ref.t_compute, ref.t_hbm) + ref.t_overhead
+    assert got == ref
+
+
+def test_engine_seeds_under_its_own_machine_model():
+    """An AB-off engine must seed from the AB-off lattice optimum: the
+    exact-<=-greedy guarantee has to hold under the engine's own knobs."""
+    for ab, rn in itertools.product((False, True), repeat=2):
+        eng = make_engine(allocation_bypass=ab, rinse=rn, chip="gem5-apu",
+                          plan_cache=PlanCache())
+        for w in SUITE.values():
+            for op in w.ops:
+                a = eng.assign(op)
+                greedy = adaptive_assignment(op, eng.chip)
+                t_a = op_cost(op, assignment=a, chip=eng.chip,
+                              allocation_bypass=ab, rinse=rn,
+                              launches=0).t_total
+                t_g = op_cost(op, assignment=greedy, chip=eng.chip,
+                              allocation_bypass=ab, rinse=rn,
+                              launches=0).t_total
+                assert t_a <= t_g, (op.name, ab, rn, t_a, t_g)
+
+
+def test_opspec_meta_is_frozen():
+    """In-place meta mutation would silently alias stale fingerprints in
+    the plan cache — it must fail loudly instead."""
+    op = matmul_op(256, 256, 256)
+    with pytest.raises(TypeError):
+        op.meta["achieved_eff"] = 0.1
+    import dataclasses
+
+    op2 = dataclasses.replace(op, meta={**op.meta, "achieved_eff": 0.1})
+    assert op2.meta["achieved_eff"] == 0.1
+    assert fingerprint_op(op2) != fingerprint_op(op)
+
+
+def test_wide_ops_fall_back_to_greedy_not_lattice_blowup():
+    """2^operands rows must never be materialized for wide ops: the search
+    falls back to greedy and SweepTable serves scalar costs."""
+    wide_out = elementwise_op(1 << 16, n_inputs=2, n_outputs=28, dtype="f32")
+    wide_in = elementwise_op(1 << 16, n_inputs=20, n_outputs=1, dtype="f32")
+    for op in (wide_out, wide_in):
+        a = optimal_assignment(op, chip=hw.PAPER_GPU)
+        assert a == adaptive_assignment(op, hw.PAPER_GPU)
+        table = SweepTable(chip=hw.PAPER_GPU)
+        for mode in (*STATIC, StaticMode.ADAPTIVE):
+            got = table.op_cost(op, mode=mode, allocation_bypass=False,
+                                rinse=False)
+            ref = workload_cost([op], mode=mode, chip=hw.PAPER_GPU,
+                                allocation_bypass=False, rinse=False,
+                                memoize=False, search="greedy")
+            assert got == ref, mode
+        assert table.best_assignment(op) == a
+
+
+def test_plan_cache_keys_chip_by_content_not_name():
+    """Two same-named chips with different parameters must not alias
+    entries in a shared cache."""
+    import dataclasses
+
+    fast_hbm = dataclasses.replace(hw.V5E, hbm_bw=hw.V5E.hbm_bw * 4)
+    assert fast_hbm.name == hw.V5E.name
+    cache = PlanCache()
+    op = matmul_op(1024, 1024, 1024)
+    a = static_assignment(op, StaticMode.UNCACHED)
+    c1 = Planner(chip=hw.V5E, cache=cache).cost(op, assignment=a)
+    c2 = Planner(chip=fast_hbm, cache=cache).cost(op, assignment=a)
+    assert c2.t_hbm < c1.t_hbm / 2
+    assert c1 == op_cost(op, assignment=a, chip=hw.V5E)
+    assert c2 == op_cost(op, assignment=a, chip=fast_hbm)
+
+
+def test_elementwise_exact_search_prefers_stream():
+    op = elementwise_op(1 << 24, dtype="f32")
+    a = optimal_assignment(op, chip=hw.PAPER_GPU)
+    assert all(p is Policy.STREAM for p in a.values())
+
+
+# ---------------------------------------------------------------------------
+# Benchmark JSON plumbing
+# ---------------------------------------------------------------------------
+
+def test_benchmark_json_smoke(tmp_path):
+    out = tmp_path / "bench.json"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p
+    )
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--json", str(out),
+         "--analytic-only", "--reps", "1"],
+        capture_output=True, text=True, timeout=600, cwd=root, env=env,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    blob = json.loads(out.read_text())
+    assert blob["sweep_wall_s"] > 0
+    assert blob["seed_sweep_wall_s"] > 0
+    assert 0.0 < blob["plan_cache_hit_rate"] <= 1.0
+    assert blob["rows"], "no benchmark rows emitted"
+    names = {row["name"] for row in blob["rows"]}
+    assert any(n.startswith("fig10_12/") for n in names)
+    assert any(n.startswith("replay/") for n in names)

@@ -1,4 +1,12 @@
-"""Cache-rinsing (dirty index + flush scheduling) property tests."""
+"""Cache-rinsing (dirty index + flush scheduling) property tests.
+
+Requires the optional ``hypothesis`` dev dependency (requirements-dev.txt);
+the module skips gracefully when it is absent.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
