@@ -14,10 +14,13 @@ figure-specific metrics.
                              pure-Python path (``--no-compare-seed`` skips)
 * ``sweep_speedup``        — seed / fast
 * ``plan_cache_hit_rate``  + full ``plan_cache`` / ``sweep_table`` counters
+* ``serve_tok_s`` / ``serve_ttft_s`` / ``host_syncs_per_token`` /
+  ``seed_tok_s`` / ``serve_speedup`` — the device-resident chunked serve
+  loop vs the seed per-token dispatch loop (``benchmarks.serve_bench``)
 
-so BENCH_*.json files can track the planning-pipeline perf trajectory
-across PRs.  ``--analytic-only`` skips the measured (jit wall-time)
-benchmarks — useful for CI smoke runs.
+so BENCH_*.json files can track the planning-pipeline and serving perf
+trajectories across PRs.  ``--analytic-only`` skips the measured (jit
+wall-time) benchmarks including the serve loop — useful for CI smoke runs.
 """
 from __future__ import annotations
 
@@ -52,6 +55,10 @@ def main(argv=None) -> None:
                     help="skip measured (jit wall-time) benchmarks")
     ap.add_argument("--no-compare-seed", action="store_true",
                     help="skip timing the seed (unbatched) sweep path")
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the serve-loop benchmark")
+    ap.add_argument("--serve-chunk", type=int, default=16,
+                    help="decode chunk size for the serve benchmark")
     ap.add_argument("--reps", type=int, default=5,
                     help="repetitions per timed sweep (best-of, noise guard)")
     args = ap.parse_args(argv)
@@ -95,7 +102,15 @@ def main(argv=None) -> None:
             )
 
     # -- measured wall-time benchmarks --------------------------------------
+    serve_summary = {}
     if not args.analytic_only:
+        if not args.no_serve:
+            from benchmarks import serve_bench
+
+            serve_rows, serve_summary = serve_bench.serve_rows(
+                chunk_size=args.serve_chunk, reps=max(1, args.reps)
+            )
+            _emit(serve_rows, rows)
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 
@@ -108,6 +123,7 @@ def main(argv=None) -> None:
             seed_sweep_wall_s / sweep_wall_s if seed_sweep_wall_s else None
         ),
         "plan_cache_hit_rate": stats["hit_rate"],
+        **serve_summary,
         "plan_cache": {k: v for k, v in stats.items() if k != "sweep_table"},
         "sweep_table": stats["sweep_table"],
     }

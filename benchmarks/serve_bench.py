@@ -1,0 +1,173 @@
+"""Serve-path benchmark: device-resident chunked engine vs per-token loop.
+
+The seed `ServeEngine` paid one jit dispatch plus one device→host sync per
+generated token.  The chunked engine decodes ``chunk_size`` tokens per
+dispatch with on-device sampling and syncs once per chunk.  Both paths run
+the same smoke model on the same request mix, warm (compile excluded), so
+the ratio isolates the host-overhead cut — the throughput-sensitive decode
+class the paper's Uncached policy targets.
+
+Emitted metrics (also merged into ``benchmarks.run --json`` output):
+
+* ``serve_tok_s``          — chunked engine, total tokens / wall
+* ``serve_ttft_s``         — mean submit→first-token latency, warm
+* ``host_syncs_per_token`` — total syncs / total tokens (chunked)
+* ``seed_tok_s``           — per-token dispatch loop, total tokens / wall
+* ``serve_speedup``        — serve_tok_s / seed_tok_s
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model, get_config
+from repro.serve.engine import Request, ServeEngine, greedy_sample
+
+SERVE_ARCH = "qwen2.5-32b"
+SLOTS = 4
+MAX_LEN = 64
+CHUNK = 16
+N_REQUESTS = 8
+# 1 prefill token + 32 decode tokens = exactly two full chunks per slot.
+MAX_NEW = 33
+
+
+def _requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(4, 10, size=N_REQUESTS)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32),
+                max_new_tokens=MAX_NEW)
+        for n in lens
+    ]
+
+
+def _seed_loop(cfg, model, params, requests):
+    """The seed engine's schedule: static admission waves, one jitted
+    dispatch + one host sync per generated token.  (Prompts are right-padded
+    with seg_lens so outputs match the chunked engine bit-for-bit; the
+    dispatch/sync pattern is the seed's.)"""
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    total = 0
+    syncs = 0
+    pending = list(requests)
+    while pending:
+        wave, pending = pending[:SLOTS], pending[SLOTS:]
+        cache = model.init_cache(params, batch=SLOTS, max_len=MAX_LEN)
+        pad = max(len(r.prompt) for r in wave)
+        toks = np.zeros((SLOTS, pad), np.int32)
+        seg = np.zeros((SLOTS,), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, :len(r.prompt)] = r.prompt
+            seg[i] = len(r.prompt)
+        logits, cache = prefill(
+            params, cache, jnp.asarray(toks), seg_lens=jnp.asarray(seg)
+        )
+        nxt = np.asarray(greedy_sample(logits))      # host sync
+        syncs += 1
+        for i, r in enumerate(wave):
+            r.generated.append(int(nxt[i]))
+            total += 1
+        live = {i: r for i, r in enumerate(wave)
+                if len(r.generated) < r.max_new_tokens}
+        while live:
+            step = np.zeros((SLOTS, 1), np.int32)
+            seg1 = np.zeros((SLOTS,), np.int32)
+            for i, r in live.items():
+                step[i, 0] = r.generated[-1]
+                seg1[i] = 1
+            logits, cache = decode(
+                params, cache, jnp.asarray(step), seg_lens=jnp.asarray(seg1)
+            )
+            nxt = np.asarray(greedy_sample(logits))  # host sync per token
+            syncs += 1
+            done = []
+            for i, r in live.items():
+                r.generated.append(int(nxt[i]))
+                total += 1
+                if len(r.generated) >= r.max_new_tokens:
+                    done.append(i)
+            for i in done:
+                del live[i]
+    return total, syncs
+
+
+def serve_rows(chunk_size: int = CHUNK, reps: int = 3):
+    """Warm both paths, time both best-of-``reps``, return (rows, summary).
+
+    The timed windows are tens of milliseconds on the smoke model, so a
+    single rep is noise-prone when other benchmarks share the process —
+    best-of mirrors the sweep benchmark's noise guard."""
+    cfg = get_config(SERVE_ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # -- chunked engine: warm run compiles, later runs are timed -----------
+    eng = ServeEngine(cfg, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                      chunk_size=chunk_size)
+    eng.run(_requests(cfg, seed=0))
+    serve_wall = None
+    for _ in range(max(1, reps)):
+        base = dict(eng.stats)
+        reqs = _requests(cfg, seed=1)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        if serve_wall is None or dt < serve_wall:
+            serve_wall = dt
+            ttft = float(np.mean(
+                [r.ttft_s for r in reqs if r.ttft_s is not None]
+            ))
+        delta = {k: eng.stats[k] - base[k] for k in eng.stats}
+    serve_tokens = delta["decode_tokens"] + delta["prefill_tokens"]
+    serve_tok_s = serve_tokens / serve_wall
+    syncs_per_tok = delta["host_syncs"] / serve_tokens
+
+    # -- seed-style per-token loop: warm, then timed best-of ---------------
+    _seed_loop(cfg, model, params, _requests(cfg, seed=0))
+    seed_wall = None
+    for _ in range(max(1, reps)):
+        seed_reqs = _requests(cfg, seed=1)
+        t0 = time.perf_counter()
+        seed_tokens, seed_syncs = _seed_loop(cfg, model, params, seed_reqs)
+        dt = time.perf_counter() - t0
+        seed_wall = dt if seed_wall is None else min(seed_wall, dt)
+    seed_tok_s = seed_tokens / seed_wall
+
+    # Both schedules must emit identical tokens (greedy, same weights).
+    for a, b in zip(reqs, seed_reqs):
+        assert a.generated == b.generated, "chunked != per-token output"
+
+    summary = {
+        "serve_arch": SERVE_ARCH,
+        "serve_chunk_size": chunk_size,
+        "serve_tok_s": serve_tok_s,
+        "serve_ttft_s": ttft,
+        "host_syncs_per_token": syncs_per_tok,
+        "seed_tok_s": seed_tok_s,
+        "seed_syncs_per_token": seed_syncs / seed_tokens,
+        "serve_speedup": serve_tok_s / seed_tok_s,
+    }
+    rows = [
+        {"name": "serve/chunked", "us_per_call": serve_wall * 1e6 / serve_tokens,
+         "tok_s": serve_tok_s, "ttft_s": ttft,
+         "host_syncs_per_token": syncs_per_tok},
+        {"name": "serve/seed_per_token",
+         "us_per_call": seed_wall * 1e6 / seed_tokens,
+         "tok_s": seed_tok_s,
+         "host_syncs_per_token": seed_syncs / seed_tokens},
+    ]
+    return rows, summary
+
+
+if __name__ == "__main__":
+    import json
+
+    rows, summary = serve_rows()
+    for r in rows:
+        print(r)
+    print(json.dumps(summary, indent=1))

@@ -185,6 +185,15 @@ def _maybe_shard(x, spec_dims: tuple):
     return jax.lax.with_sharding_constraint(x, P(*spec_dims))
 
 
+def _offset_rows(q_offset) -> jnp.ndarray:
+    """Normalize a query-position offset to a (B,) vector, B in {1, b}.
+
+    A scalar offset is the uniform-cursor case; a (b,) vector carries the
+    per-slot ragged cursors of continuous batching."""
+    off = jnp.asarray(q_offset)
+    return off[None] if off.ndim == 0 else off
+
+
 def _sdpa_naive(q, k, v, causal: bool, q_offset, kv_len=None):
     """q: (b, s, hq, dh); k/v: (b, t, hkv, dh). fp32 softmax."""
     b, s, hq, dh = q.shape
@@ -194,10 +203,11 @@ def _sdpa_naive(q, k, v, causal: bool, q_offset, kv_len=None):
     qf = qf.reshape(b, s, hkv, group, dh)
     logits = jnp.einsum("bshgd,bthd->bhgst", qf, k.astype(jnp.float32))
     if causal:
-        qi = jnp.arange(s)[:, None] + q_offset
-        ki = jnp.arange(t)[None, :]
-        mask = ki <= qi
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        off = _offset_rows(q_offset)                          # (1,) or (b,)
+        qi = off[:, None, None] + jnp.arange(s)[None, :, None]
+        ki = jnp.arange(t)[None, None, :]
+        mask = ki <= qi                                       # (B, s, t)
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
     if kv_len is not None:
         mask = jnp.arange(t)[None, :] < kv_len[:, None]          # (b, t)
         logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
@@ -243,10 +253,11 @@ def _sdpa_chunked(q, k, v, causal: bool, q_offset, kv_len=None,
     kc = jnp.moveaxis(k.astype(jnp.float32).reshape(b, nc, ck, hkv, dh), 1, 0)
     vc = jnp.moveaxis(v.astype(jnp.float32).reshape(b, nc, ck, hkv, dh), 1, 0)
     valid = kv_len if kv_len is not None else jnp.full((b,), t)
+    off = _offset_rows(q_offset)                              # (1,) or (b,)
 
     def q_body(_, q_in):
         qblk, iq = q_in                                       # (b, qb, hkv, g, dh)
-        qi = iq * qb + jnp.arange(qb)[:, None] + q_offset     # (qb, 1)
+        qi = iq * qb + jnp.arange(qb)[None, :, None] + off[:, None, None]
 
         def kv_body(carry, inp):
             m_prev, l_prev, acc = carry
@@ -259,7 +270,7 @@ def _sdpa_chunked(q, k, v, causal: bool, q_offset, kv_len=None,
             )
             mask = ki[None] < valid[:, None, None]            # (b, 1, ck)
             if causal:
-                mask = mask & (ki <= qi)[None]                # (b, qb, ck)
+                mask = mask & (ki[None] <= qi)                # (b, qb, ck)
             logits = jnp.where(mask[:, None, None], logits, -1e30)
             m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
             alpha = jnp.exp(m_prev - m_cur)
@@ -300,15 +311,54 @@ def _sdpa(q, k, v, causal: bool, q_offset, kv_len=None):
     return _sdpa_naive(q, k, v, causal, q_offset, kv_len)
 
 
+def seg_mask(s: int, seg_lens: jnp.ndarray | None) -> jnp.ndarray | None:
+    """(b, s) validity mask for a ragged block: col i valid iff i < seg_lens[b]."""
+    if seg_lens is None:
+        return None
+    return jnp.arange(s)[None, :] < seg_lens[:, None]
+
+
+def last_valid_slice(x: jnp.ndarray, seg_lens: jnp.ndarray | None) -> jnp.ndarray:
+    """Gather each slot's last *valid* position: x (b, s, d) -> (b, 1, d).
+
+    seg_lens None means the whole block is valid (uniform prefill) — the
+    seed's ``x[:, -1:]``.  Slots with seg_lens == 0 return row 0 (garbage
+    by contract; the serve engine never reads them)."""
+    if seg_lens is None:
+        return x[:, -1:]
+    idx = jnp.clip(seg_lens - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
+def append_kv(cache_kv: jnp.ndarray, new: jnp.ndarray, lengths: jnp.ndarray,
+              seg_lens: jnp.ndarray | None) -> jnp.ndarray:
+    """Scatter a (b, s, ...) block into a (b, S, ...) ring at per-slot cursors.
+
+    Row i of slot b lands at position lengths[b] + i.  Invalid rows
+    (i >= seg_lens[b]) and overflow (pos >= S) are redirected out of bounds
+    and DROPPED by the scatter — padding never lands in the cache and a
+    full slot can never clobber its own valid tail."""
+    b, s = new.shape[:2]
+    S = cache_kv.shape[1]
+    pos = lengths[:, None] + jnp.arange(s)[None, :]           # (b, s)
+    valid = seg_mask(s, seg_lens)
+    if valid is not None:
+        pos = jnp.where(valid, pos, S)
+    return cache_kv.at[jnp.arange(b)[:, None], pos].set(
+        new.astype(cache_kv.dtype), mode="drop"
+    )
+
+
 def apply_attn(
     p: Params,
     x: jnp.ndarray,                   # (b, s, d)
     cfg: ModelConfig,
     positions: jnp.ndarray,           # (b, s) or (s,)
     kv_src: jnp.ndarray | None = None,  # cross-attn source (b, t, d)
-    cache: Params | None = None,      # {"k","v": (b, S, hkv, dh), "len": (b,)}
+    cache: Params | None = None,      # {"k","v": (b, S, hkv, dh), "lengths": (b,)}
     causal: bool = True,
     use_rope: bool = True,
+    seg_lens: jnp.ndarray | None = None,  # (b,) valid new tokens per slot
 ) -> tuple[jnp.ndarray, Params | None]:
     b, s, d = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
@@ -327,22 +377,24 @@ def apply_attn(
     new_cache = None
     kv_len = None
     q_offset: Any = 0
-    is_cross_cached = cache is not None and "len" not in cache
+    is_cross_cached = cache is not None and "lengths" not in cache
     if cache is not None:
         if kv_src is None and not is_cross_cached:
-            # Self-attention decode/prefill-append: write at the cursor.
-            # cache["len"] is a scalar int32 cursor (uniform batch lengths).
-            start = cache["len"]
-            kc = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0)
-            )
-            vc = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0)
-            )
+            # Self-attention decode/prefill-append: scatter at per-slot
+            # cursors.  cache["lengths"] is the (b,) int32 ragged cursor
+            # vector; slots free and re-admit independently.  Positions at
+            # or beyond each slot's valid length hold stale bytes but are
+            # masked out via kv_len below and overwritten as the cursor
+            # advances.
+            lengths = cache["lengths"]
+            kc = append_kv(cache["k"], k, lengths, seg_lens)
+            vc = append_kv(cache["v"], v, lengths, seg_lens)
             k, v = kc, vc
-            kv_len = jnp.full((b,), start + s, jnp.int32)
-            new_cache = {"k": kc, "v": vc, "len": start + s}
-            q_offset = start
+            kv_len = lengths + (
+                jnp.int32(s) if seg_lens is None else seg_lens
+            )
+            new_cache = {"k": kc, "v": vc}
+            q_offset = lengths
         else:
             # Cross-attention: cache holds precomputed source K/V.
             k, v = cache["k"], cache["v"]
@@ -553,12 +605,47 @@ def cross_entropy(
 
 @dataclasses.dataclass
 class ModelApply:
-    """Bundle returned by each model module."""
+    """Bundle returned by each model module.
+
+    ``prefill``/``decode_step`` accept an optional keyword ``seg_lens``
+    ((b,) int32): the number of valid new tokens per slot in this call.
+    None means the whole block is valid for every slot (the uniform path).
+    ``seg_lens[b] == 0`` leaves slot b's cache state untouched — how the
+    serve engine parks finished slots inside a decode chunk.
+
+    ``reset_slots(cache, mask)`` clears per-slot recurrent state (cursor,
+    SSM/conv state) for slots where mask is True, so a freed slot can be
+    re-admitted mid-stream without a fresh cache allocation."""
 
     config: ModelConfig
     init: Any            # (key) -> params
     forward: Any         # (params, tokens, extras) -> logits
     loss: Any            # (params, batch) -> (loss, metrics)
     init_cache: Any      # (params, batch, max_len, extras) -> cache
-    prefill: Any         # (params, cache, tokens, extras) -> (logits, cache)
-    decode_step: Any     # (params, cache, tokens) -> (logits, cache)
+    prefill: Any         # (params, cache, tokens, seg_lens) -> (logits, cache)
+    decode_step: Any     # (params, cache, tokens, seg_lens) -> (logits, cache)
+    reset_slots: Any = None  # (cache, mask (b,) bool) -> cache
+
+
+def reset_lengths(cache: Params, mask: jnp.ndarray) -> Params:
+    """Default reset: rewind the ragged cursor; stale KV is masked/overwritten."""
+    cache = dict(cache)
+    cache["lengths"] = jnp.where(mask, 0, cache["lengths"]).astype(jnp.int32)
+    return cache
+
+
+def reset_recurrent(cache: Params, mask: jnp.ndarray,
+                    state_keys: tuple = ("ssm", "conv")) -> Params:
+    """reset_lengths plus zeroed recurrent-state leaves (batch on axis 1).
+
+    Unlike KV buffers, SSM/conv state has no validity mask — a re-admitted
+    slot must start from genuinely zero state.  Leaves not named in
+    ``state_keys`` (e.g. zamba2's "kv") pass through untouched."""
+    out = reset_lengths(cache, mask)
+    keep = ~mask
+    for key in state_keys:
+        leaf = cache[key]
+        out[key] = leaf * keep.astype(leaf.dtype).reshape(
+            (1, -1) + (1,) * (leaf.ndim - 2)
+        )
+    return out

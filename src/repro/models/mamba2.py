@@ -123,11 +123,14 @@ def _split_in_proj(z_all, cfg: ModelConfig):
     return z, xbc, dt
 
 
-def _causal_conv(xbc, w, b, prev=None):
+def _causal_conv(xbc, w, b, prev=None, seg_lens=None):
     """Depthwise causal conv1d.  xbc (b, l, ch); w (width, ch).
 
     ``prev`` (b, width-1, ch) continues a streaming sequence; returns
-    (out, new_prev)."""
+    (out, new_prev).  With ragged ``seg_lens``, each slot's new window ends
+    at its own last valid token: ext[b, seg_lens[b] : seg_lens[b]+width-1]
+    (the first width-1 entries of ext are ``prev``, so seg_lens == 0 keeps
+    the window untouched — a parked slot)."""
     width = w.shape[0]
     if prev is None:
         prev = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
@@ -135,23 +138,40 @@ def _causal_conv(xbc, w, b, prev=None):
     out = sum(
         ext[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(width)
     ) + b[None, None]
-    new_prev = ext[:, -(width - 1):] if width > 1 else prev
+    if width == 1:
+        new_prev = prev
+    elif seg_lens is None:
+        new_prev = ext[:, -(width - 1):]
+    else:
+        new_prev = jax.vmap(
+            lambda e, n: jax.lax.dynamic_slice_in_dim(e, n, width - 1, axis=0)
+        )(ext, seg_lens)
     return out, new_prev
 
 
-def apply_mamba(p, x, cfg: ModelConfig, state=None, conv_prev=None):
-    """x (b, l, d) -> (y, (ssm_state, conv_prev))."""
+def apply_mamba(p, x, cfg: ModelConfig, state=None, conv_prev=None,
+                seg_lens=None):
+    """x (b, l, d) -> (y, (ssm_state, conv_prev)).
+
+    Ragged blocks gate dt to zero on invalid positions: the SSD update
+    with dt == 0 is the identity (decay exp(0)=1, zero input), so padding
+    — and parked slots with seg_lens == 0 — never touch the SSM state."""
     b, l, d = x.shape
     di, g, ds, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
     dh = cfg.ssm_headdim
     zall = x @ p["in_proj"]
     z, xbc, dtr = _split_in_proj(zall, cfg)
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prev)
+    xbc, new_conv = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"], conv_prev, seg_lens=seg_lens
+    )
     xbc = jax.nn.silu(xbc)
     xs = xbc[..., :di].reshape(b, l, h, dh)
     B = xbc[..., di:di + g * ds].reshape(b, l, g, ds)
     C = xbc[..., di + g * ds:].reshape(b, l, g, ds)
     dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    valid = cm.seg_mask(l, seg_lens)
+    if valid is not None:
+        dt = dt * valid.astype(dt.dtype)[..., None]
     A = -jnp.exp(p["A_log"])
     if l == 1 and state is not None:
         y1, new_state = ssd_decode_step(
@@ -219,11 +239,11 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
     return {
         "ssm": jnp.zeros((L, batch, h, ds, dh), jnp.float32),
         "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), jnp.dtype(cfg.dtype)),
-        "len": jnp.zeros((), jnp.int32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig):
+def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     b, s = tokens.shape
     x = cm.embed(params["embed"], tokens)
 
@@ -231,7 +251,7 @@ def prefill(params, cache, tokens, cfg: ModelConfig):
         lp, st, cv = inp
         y, (new_st, new_cv) = apply_mamba(
             lp["mamba"], cm.apply_norm(lp["ln"], h, cfg), cfg,
-            state=st, conv_prev=cv,
+            state=st, conv_prev=cv, seg_lens=seg_lens,
         )
         return h + y, (new_st, new_cv)
 
@@ -239,14 +259,15 @@ def prefill(params, cache, tokens, cfg: ModelConfig):
         body, x, (params["layers"], cache["ssm"], cache["conv"])
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], x[:, -1:], cfg)
+    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
     return logits, {
-        "ssm": new_ssm, "conv": new_conv, "len": cache["len"] + s
+        "ssm": new_ssm, "conv": new_conv,
+        "lengths": cache["lengths"] + (s if seg_lens is None else seg_lens),
     }
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    return prefill(params, cache, tokens, cfg)
+def decode_step(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+    return prefill(params, cache, tokens, cfg, seg_lens=seg_lens)
 
 
 def build(cfg: ModelConfig) -> cm.ModelApply:
@@ -258,4 +279,5 @@ def build(cfg: ModelConfig) -> cm.ModelApply:
         init_cache=functools.partial(init_cache, cfg=cfg),
         prefill=functools.partial(prefill, cfg=cfg),
         decode_step=functools.partial(decode_step, cfg=cfg),
+        reset_slots=cm.reset_recurrent,
     )

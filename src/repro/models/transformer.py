@@ -65,9 +65,10 @@ def init(key, cfg: ModelConfig):
 # Blocks
 # ---------------------------------------------------------------------------
 
-def _self_block(p, x, cfg: ModelConfig, positions, cache=None):
+def _self_block(p, x, cfg: ModelConfig, positions, cache=None, seg_lens=None):
     h, new_cache = cm.apply_attn(
-        p["attn"], cm.apply_norm(p["ln1"], x, cfg), cfg, positions, cache=cache
+        p["attn"], cm.apply_norm(p["ln1"], x, cfg), cfg, positions, cache=cache,
+        seg_lens=seg_lens,
     )
     x = x + h
     aux = jnp.zeros((), jnp.float32)
@@ -129,15 +130,27 @@ def _stack_nocache(params, x, cfg: ModelConfig, positions, vis,
     return x, aux
 
 
-def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache):
-    """Scan over layers threading per-layer KV caches (stacked leading dim)."""
+def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache,
+                  seg_lens=None):
+    """Scan over layers threading per-layer KV caches (stacked leading dim).
+
+    ``cache["lengths"]`` is the (b,) ragged cursor vector shared by every
+    layer (each layer sees the same tokens); per-layer caches carry only
+    the K/V buffers."""
+    lengths = cache["lengths"]
+    s = x.shape[1]
+    new_lengths = lengths + (s if seg_lens is None else seg_lens)
     if cfg.cross_attn_every:
         def group_body(h, inp):
             gp, gcache = inp
 
             def one_self(hh, inp2):
                 lp, lc = inp2
-                hh, _, nc = _self_block(lp, hh, cfg, positions, cache=lc)
+                hh, _, nc = _self_block(
+                    lp, hh, cfg, positions,
+                    cache={"k": lc["k"], "v": lc["v"], "lengths": lengths},
+                    seg_lens=seg_lens,
+                )
                 return hh, nc
 
             h, new_self = cm.scan(
@@ -160,15 +173,19 @@ def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache):
             ({"self": params["self_layers"], "cross": params["cross_layers"]},
              cache["layers"]),
         )
-        return x, {"layers": new_cache, "len": cache["len"] + x.shape[1]}
+        return x, {"layers": new_cache, "lengths": new_lengths}
 
     def body(h, inp):
         lp, lc = inp
-        h, _, nc = _self_block(lp, h, cfg, positions, cache=lc)
+        h, _, nc = _self_block(
+            lp, h, cfg, positions,
+            cache={"k": lc["k"], "v": lc["v"], "lengths": lengths},
+            seg_lens=seg_lens,
+        )
         return h, nc
 
     x, new_layers = cm.scan(body, x, (params["layers"], cache["layers"]))
-    return x, {"layers": new_layers, "len": cache["len"] + x.shape[1]}
+    return x, {"layers": new_layers, "lengths": new_lengths}
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +222,6 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
         return {
             "k": jnp.zeros((n, batch, max_len, hkv, dh), dt),
             "v": jnp.zeros((n, batch, max_len, hkv, dh), dt),
-            "len": jnp.zeros((n,), jnp.int32),
         }
 
     if cfg.cross_attn_every:
@@ -227,55 +243,30 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
         self_kv = {
             "k": jnp.zeros((g, span, batch, max_len, hkv, dh), dt),
             "v": jnp.zeros((g, span, batch, max_len, hkv, dh), dt),
-            "len": jnp.zeros((g, span), jnp.int32),
         }
         return {"layers": {"self": self_kv, "cross": cross},
-                "len": jnp.zeros((), jnp.int32), "vis": visp}
-    return {"layers": kv(cfg.n_layers), "len": jnp.zeros((), jnp.int32)}
+                "lengths": jnp.zeros((batch,), jnp.int32), "vis": visp}
+    return {"layers": kv(cfg.n_layers),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
 
 
-def _cache_with_cursor(cache, cfg: ModelConfig):
-    """Broadcast the global cursor into the per-layer cache dicts."""
-    if cfg.cross_attn_every:
-        layers = {
-            "self": {
-                "k": cache["layers"]["self"]["k"],
-                "v": cache["layers"]["self"]["v"],
-                "len": jnp.zeros(
-                    cache["layers"]["self"]["len"].shape, jnp.int32
-                ) + cache["len"],
-            },
-            "cross": cache["layers"]["cross"],
-        }
-    else:
-        layers = {
-            "k": cache["layers"]["k"],
-            "v": cache["layers"]["v"],
-            "len": jnp.zeros(
-                cache["layers"]["len"].shape, jnp.int32
-            ) + cache["len"],
-        }
-    return layers
-
-
-def prefill(params, cache, tokens, cfg: ModelConfig, vis=None):
+def prefill(params, cache, tokens, cfg: ModelConfig, vis=None, seg_lens=None):
     b, s = tokens.shape
     x = cm.embed(params["embed"], tokens)
-    positions = cache["len"] + jnp.arange(s)[None, :]
+    positions = cache["lengths"][:, None] + jnp.arange(s)[None, :]
     visp = cache.get("vis") if cfg.cross_attn_every else None
-    layer_cache = _cache_with_cursor(cache, cfg)
     x, new_cache = _stack_cached(
-        params, x, cfg, positions, visp, {"layers": layer_cache, "len": cache["len"]}
+        params, x, cfg, positions, visp, cache, seg_lens=seg_lens
     )
     if cfg.cross_attn_every:
         new_cache["vis"] = cache["vis"]
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], x[:, -1:], cfg)
+    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
     return logits, new_cache
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    return prefill(params, cache, tokens, cfg)
+def decode_step(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+    return prefill(params, cache, tokens, cfg, seg_lens=seg_lens)
 
 
 def build(cfg: ModelConfig) -> cm.ModelApply:
@@ -287,4 +278,5 @@ def build(cfg: ModelConfig) -> cm.ModelApply:
         init_cache=functools.partial(init_cache, cfg=cfg),
         prefill=functools.partial(prefill, cfg=cfg),
         decode_step=functools.partial(decode_step, cfg=cfg),
+        reset_slots=cm.reset_lengths,
     )

@@ -85,10 +85,11 @@ def encode(params, frames, cfg: ModelConfig,
     return cm.apply_norm(params["ln_enc"], x, cfg)
 
 
-def _dec_block(lp, h, cfg, positions, enc_out, self_cache=None, cross_cache=None):
+def _dec_block(lp, h, cfg, positions, enc_out, self_cache=None,
+               cross_cache=None, seg_lens=None):
     a, new_self = cm.apply_attn(
         lp["self_attn"], cm.apply_norm(lp["ln1"], h, cfg), cfg, positions,
-        cache=self_cache, causal=True, use_rope=False,
+        cache=self_cache, causal=True, use_rope=False, seg_lens=seg_lens,
     )
     h = h + a
     c, new_cross = cm.apply_attn(
@@ -149,23 +150,26 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
             "v": jnp.zeros((L, batch, max_len, hkv, dh), dt),
         },
         "cross": cross,              # RESIDENT: reused by every decode step
-        "len": jnp.zeros((), jnp.int32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig):
+def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     b, s = tokens.shape
-    start = cache["len"]
-    x = cm.embed(params["embed"], tokens) + jax.lax.dynamic_slice_in_dim(
-        params["dec_pos"], start, s, axis=0
-    )[None]
-    positions = start + jnp.arange(s)[None, :]
+    lengths = cache["lengths"]
+    positions = lengths[:, None] + jnp.arange(s)[None, :]     # (b, s)
+    # Per-slot learned position rows (ragged cursors need a gather, not a
+    # uniform dynamic slice); jnp.take clamps at the table edge.
+    x = cm.embed(params["embed"], tokens) + jnp.take(
+        params["dec_pos"], positions, axis=0
+    )
 
     def body(h, inp):
         lp, sc, cc = inp
-        self_cache = {"k": sc["k"], "v": sc["v"], "len": start}
+        self_cache = {"k": sc["k"], "v": sc["v"], "lengths": lengths}
         h, new_self, _ = _dec_block(
-            lp, h, cfg, positions, None, self_cache=self_cache, cross_cache=cc
+            lp, h, cfg, positions, None, self_cache=self_cache, cross_cache=cc,
+            seg_lens=seg_lens,
         )
         return h, {"k": new_self["k"], "v": new_self["v"]}
 
@@ -173,12 +177,15 @@ def prefill(params, cache, tokens, cfg: ModelConfig):
         body, x, (params["dec_layers"], cache["self"], cache["cross"])
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], x[:, -1:], cfg)
-    return logits, {"self": new_self, "cross": cache["cross"], "len": start + s}
+    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
+    return logits, {
+        "self": new_self, "cross": cache["cross"],
+        "lengths": lengths + (s if seg_lens is None else seg_lens),
+    }
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    return prefill(params, cache, tokens, cfg)
+def decode_step(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+    return prefill(params, cache, tokens, cfg, seg_lens=seg_lens)
 
 
 def build(cfg: ModelConfig) -> cm.ModelApply:
@@ -190,4 +197,5 @@ def build(cfg: ModelConfig) -> cm.ModelApply:
         init_cache=functools.partial(init_cache, cfg=cfg),
         prefill=functools.partial(prefill, cfg=cfg),
         decode_step=functools.partial(decode_step, cfg=cfg),
+        reset_slots=cm.reset_lengths,
     )

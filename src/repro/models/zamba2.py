@@ -46,9 +46,10 @@ def init(key, cfg: ModelConfig):
     return params
 
 
-def _shared_block(p, x, cfg, positions, cache=None):
+def _shared_block(p, x, cfg, positions, cache=None, seg_lens=None):
     h, new_cache = cm.apply_attn(
-        p["attn"], cm.apply_norm(p["ln1"], x, cfg), cfg, positions, cache=cache
+        p["attn"], cm.apply_norm(p["ln1"], x, cfg), cfg, positions, cache=cache,
+        seg_lens=seg_lens,
     )
     x = x + h
     x = x + cm.apply_mlp(p["mlp"], cm.apply_norm(p["ln2"], x, cfg), cfg)
@@ -107,23 +108,22 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
         "kv": {
             "k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dt),
             "v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dt),
-            "len": jnp.zeros((g,), jnp.int32),
         },
-        "len": jnp.zeros((), jnp.int32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig):
+def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     b, s = tokens.shape
     k = cfg.shared_attn_every
     g = cfg.n_layers // k
     x = cm.embed(params["embed"], tokens)
-    positions = cache["len"] + jnp.arange(s)[None, :]
+    lengths = cache["lengths"]
+    positions = lengths[:, None] + jnp.arange(s)[None, :]
     glayers = _group_view(params["layers"], g, k)
     gssm = cache["ssm"].reshape(g, k, *cache["ssm"].shape[1:])
     gconv = cache["conv"].reshape(g, k, *cache["conv"].shape[1:])
     shared = params["shared"]
-    start = cache["len"]
 
     def group_body(h, inp):
         gp, ssm_g, conv_g, kv_g = inp
@@ -132,13 +132,15 @@ def prefill(params, cache, tokens, cfg: ModelConfig):
             lp, st, cv = inp2
             y, (nst, ncv) = mb.apply_mamba(
                 lp["mamba"], cm.apply_norm(lp["ln"], hh, cfg), cfg,
-                state=st, conv_prev=cv,
+                state=st, conv_prev=cv, seg_lens=seg_lens,
             )
             return hh + y, (nst, ncv)
 
         h, (nssm, nconv) = cm.scan(one_mamba, h, (gp, ssm_g, conv_g))
-        kv_in = {"k": kv_g["k"], "v": kv_g["v"], "len": start}
-        h, nkv = _shared_block(shared, h, cfg, positions, cache=kv_in)
+        kv_in = {"k": kv_g["k"], "v": kv_g["v"], "lengths": lengths}
+        h, nkv = _shared_block(
+            shared, h, cfg, positions, cache=kv_in, seg_lens=seg_lens
+        )
         return h, (nssm, nconv, nkv)
 
     x, (nssm, nconv, nkv) = cm.scan(
@@ -147,19 +149,18 @@ def prefill(params, cache, tokens, cfg: ModelConfig):
          {"k": cache["kv"]["k"], "v": cache["kv"]["v"]}),
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], x[:, -1:], cfg)
+    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
     new_cache = {
         "ssm": nssm.reshape(cfg.n_layers, *nssm.shape[2:]),
         "conv": nconv.reshape(cfg.n_layers, *nconv.shape[2:]),
-        "kv": {"k": nkv["k"], "v": nkv["v"],
-               "len": jnp.full((g,), start + s, jnp.int32)},
-        "len": start + s,
+        "kv": {"k": nkv["k"], "v": nkv["v"]},
+        "lengths": lengths + (s if seg_lens is None else seg_lens),
     }
     return logits, new_cache
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    return prefill(params, cache, tokens, cfg)
+def decode_step(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+    return prefill(params, cache, tokens, cfg, seg_lens=seg_lens)
 
 
 def build(cfg: ModelConfig) -> cm.ModelApply:
@@ -171,4 +172,5 @@ def build(cfg: ModelConfig) -> cm.ModelApply:
         init_cache=functools.partial(init_cache, cfg=cfg),
         prefill=functools.partial(prefill, cfg=cfg),
         decode_step=functools.partial(decode_step, cfg=cfg),
+        reset_slots=cm.reset_recurrent,
     )

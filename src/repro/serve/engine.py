@@ -1,4 +1,4 @@
-"""Batched serving engine: continuous prefill + decode over a KV cache.
+"""Device-resident continuous-batching serve engine.
 
 The memory-policy engine drives two serving decisions (DESIGN.md §5):
 
@@ -6,15 +6,30 @@ The memory-policy engine drives two serving decisions (DESIGN.md §5):
   stream (the paper's throughput-sensitive class) — STREAM via the
   split-KV decode kernel; fixed-source caches (whisper enc K/V, vision
   patch K/V) are RESIDENT (reused every step, fetched once).
-* Split-count planning for flash-decoding (`kernels.decode_attention.ops`).
+* Split-count planning for flash-decoding (`kernels.decode_attention.ops`),
+  memoized in the PlanCache and re-consulted at every admission wave.
 
-``ServeEngine`` keeps request slots (static batch), admits new requests by
-prefilling into free slots, and steps all live slots together — simple
-continuous batching.
+The serving loop itself is built to run at hardware speed (the inference
+loop, not the policy search, is the artifact that must be fast):
+
+* **Chunked on-device decode** — one `lax.scan` dispatch decodes
+  ``chunk_size`` tokens for every slot with on-device greedy sampling and
+  per-slot done flags; the host syncs once per *chunk* (to read the
+  emitted tokens), not once per token.
+* **Ragged slots** — the cache carries a per-slot ``lengths`` cursor
+  vector, so slots free and re-admit independently: finished slots park
+  (``seg_lens == 0`` leaves their state untouched) while live slots keep
+  decoding, and freed slots take new prompts mid-stream via a ragged
+  right-padded prefill (`models.common.append_kv` drops padding on the
+  scatter, so mixed-length prompts never cross-contaminate).
+* **Donated buffers** — the cache (and the per-slot token/budget vectors)
+  are donated to each dispatch, so KV updates are in-place on device.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -35,44 +50,93 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    ttft_s: float | None = None   # submit -> first token wall time
+    submit_t: float | None = None
 
 
 def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits[:, -1], axis=-1)
 
 
+def _pad_bucket(n: int, cap: int) -> int:
+    """Round a prefill width up to a power of two (>= 8) so the number of
+    distinct prefill compilations is O(log max_len), not O(#prompt-lens)."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 class ServeEngine:
+    """Continuous-batching engine over a fixed pool of request slots.
+
+    ``run(requests)`` (or ``submit`` + ``drain``) pushes requests through a
+    queue: free slots are prefilled (ragged, right-padded), live slots
+    decode in device-resident chunks, finished slots free at chunk
+    boundaries and are immediately re-admitted from the queue.
+    """
+
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
                  max_len: int, extras: dict[str, Any] | None = None,
-                 policy_engine: CachePolicyEngine | None = None):
+                 policy_engine: CachePolicyEngine | None = None,
+                 chunk_size: int = 8):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
+        self.chunk_size = max(1, chunk_size)
         self.extras = extras or {}
+        # Capacity-based MoE dispatch lets right-pad/parked garbage tokens
+        # compete with valid tokens for expert capacity (silent drops);
+        # serving requires the per-token dense dispatch (DESIGN.md §5.1).
+        assert not cfg.n_experts or cfg.moe_dispatch == "dense", (
+            "ServeEngine requires moe_dispatch='dense' (ragged slots would "
+            "let padding contend for expert capacity under 'sorted')"
+        )
         self.policy = policy_engine or make_engine()
         self.kv_residency = self.policy.kv_policy(self._kv_bytes_per_layer())
         # Decode-attention plan, memoized in the policy engine's PlanCache:
         # one lattice search + allocation per serve process, a cache hit for
-        # every subsequent engine (re-plans are the serve-time hot path).
-        self.decode_plan = None
-        if cfg.n_heads and cfg.head_dim_:
-            self.decode_plan = self.policy.plan_op(attention_op(
-                batch_slots, cfg.n_heads, max(1, cfg.n_kv_heads),
-                1, max_len, cfg.head_dim_, causal=False, name="serve_decode",
-            ))
+        # every subsequent admission wave (re-plans are the admission-time
+        # hot path).
+        self.decode_plan = self._plan_decode()
         self.cache = self.model.init_cache(
             params, batch=batch_slots, max_len=max_len, **self.extras
         )
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(self.model.prefill)
-        self.live: dict[int, Request] = {}
+        self._reset_slots = self.model.reset_slots
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1, 4, 5))
+        self._decode_chunk = jax.jit(self._chunk_fn, donate_argnums=(1, 2, 3))
+        # Device-resident per-slot loop state: last sampled token and the
+        # remaining token budget (0 == slot parked/free).
+        self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
+        self.remaining = jnp.zeros((batch_slots,), jnp.int32)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.queue: collections.deque[Request] = collections.deque()
+        self.stats = {
+            "host_syncs": 0,          # total device->host barriers
+            "decode_syncs": 0,        # one per decode chunk
+            "decode_tokens": 0,       # tokens emitted by decode chunks
+            "prefill_tokens": 0,      # first tokens emitted by prefill
+            "chunks": 0,
+            "admission_waves": 0,
+        }
+
+    # -- policy ------------------------------------------------------------
 
     def _kv_bytes_per_layer(self) -> int:
         kv_heads = max(1, self.cfg.n_kv_heads)
         return (2 * self.slots * self.max_len * kv_heads
                 * self.cfg.head_dim_ * hw.dtype_bytes(self.cfg.dtype))
+
+    def _plan_decode(self):
+        if not (self.cfg.n_heads and self.cfg.head_dim_):
+            return None
+        return self.policy.plan_op(attention_op(
+            self.slots, self.cfg.n_heads, max(1, self.cfg.n_kv_heads),
+            1, self.max_len, self.cfg.head_dim_, causal=False,
+            name="serve_decode",
+        ))
 
     def policy_report(self) -> dict:
         """Serving-side policy decisions (DESIGN.md §5) + planner counters."""
@@ -91,44 +155,142 @@ class ServeEngine:
             }
         return report
 
-    # NOTE on the single-cursor cache: the uniform-cursor layout keeps the
-    # dry-run/step functions static-shaped; slots admitted together share a
-    # prompt window (padded).  Continuous batching with ragged lengths uses
-    # the `lengths`-aware decode kernel at the attention level.
-    def admit(self, requests: list[Request]) -> None:
-        assert len(requests) <= self.slots
-        pad_to = max(len(r.prompt) for r in requests)
-        toks = np.zeros((self.slots, pad_to), np.int32)
-        for i, r in enumerate(requests):
-            r.slot = i
-            toks[i, pad_to - len(r.prompt):] = r.prompt  # left-pad
-            self.live[i] = r
-        logits, self.cache = self._prefill(
-            self.params, self.cache, jnp.asarray(toks)
+    def serve_stats(self) -> dict:
+        """Host-sync accounting for the decode loop."""
+        out = dict(self.stats)
+        total = out["decode_tokens"] + out["prefill_tokens"]
+        out["host_syncs_per_token"] = (
+            out["host_syncs"] / total if total else 0.0
         )
-        nxt = np.asarray(greedy_sample(logits))
-        for r in requests:
-            r.generated.append(int(nxt[r.slot]))
+        out["decode_syncs_per_token"] = (
+            out["decode_syncs"] / out["decode_tokens"]
+            if out["decode_tokens"] else 0.0
+        )
+        return out
 
-    def step(self) -> None:
-        toks = np.zeros((self.slots, 1), np.int32)
-        for slot, r in self.live.items():
-            toks[slot, 0] = r.generated[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks)
+    # -- device-side step functions (jitted once) --------------------------
+
+    def _prefill_fn(self, params, cache, tokens, seg_lens, cur_tok,
+                    remaining, new_remaining):
+        """Ragged admission prefill: reset re-admitted slots, prefill their
+        prompts (seg_lens == 0 parks continuing slots), sample each admitted
+        slot's first token on device."""
+        admitted = seg_lens > 0
+        if self._reset_slots is not None:
+            cache = self._reset_slots(cache, admitted)
+        logits, cache = self.model.prefill(
+            params, cache, tokens, seg_lens=seg_lens
         )
-        nxt = np.asarray(greedy_sample(logits))
-        finished = []
-        for slot, r in self.live.items():
-            r.generated.append(int(nxt[slot]))
+        nxt = greedy_sample(logits).astype(jnp.int32)
+        cur_tok = jnp.where(admitted, nxt, cur_tok)
+        remaining = jnp.where(admitted, new_remaining, remaining)
+        return cache, cur_tok, remaining, nxt
+
+    def _chunk_fn(self, params, cache, cur_tok, remaining):
+        """Decode ``chunk_size`` tokens per slot in one dispatch: scan of
+        single-token steps with on-device greedy sampling; slots whose
+        budget hits zero park (seg_lens == 0 -> state untouched)."""
+        def step(carry, _):
+            cache, tok, rem = carry
+            active = rem > 0
+            logits, cache = self.model.decode_step(
+                params, cache, tok[:, None],
+                seg_lens=active.astype(jnp.int32),
+            )
+            nxt = greedy_sample(logits).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tok)
+            rem = jnp.where(active, rem - 1, rem)
+            return (cache, tok, rem), (tok, active)
+
+        (cache, tok, rem), (toks, actives) = jax.lax.scan(
+            step, (cache, cur_tok, remaining), None, length=self.chunk_size
+        )
+        return cache, tok, rem, toks, actives
+
+    # -- host-side scheduling ----------------------------------------------
+
+    def submit(self, requests: list[Request]) -> None:
+        for r in requests:
+            assert len(r.prompt) > 0, (
+                "empty prompt: seg_lens==0 marks a parked slot, so a "
+                "zero-length admission would never start decoding"
+            )
+            need = len(r.prompt) + max(r.max_new_tokens - 1, 0)
+            assert need <= self.max_len, (
+                f"request needs {need} cache positions, max_len={self.max_len}"
+            )
+            r.submit_t = time.perf_counter()
+            self.queue.append(r)
+
+    def _live(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _finish(self, r: Request) -> None:
+        r.done = True
+        self.slot_req[r.slot] = None
+
+    def _admit_wave(self) -> None:
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        take = min(len(free), len(self.queue))
+        if take == 0:
+            return
+        wave = [self.queue.popleft() for _ in range(take)]
+        pad = _pad_bucket(max(len(r.prompt) for r in wave), self.max_len)
+        toks = np.zeros((self.slots, pad), np.int32)
+        seg = np.zeros((self.slots,), np.int32)
+        new_rem = np.zeros((self.slots,), np.int32)
+        for slot, r in zip(free, wave):
+            n = len(r.prompt)
+            toks[slot, :n] = r.prompt          # right-pad; scatter drops tail
+            seg[slot] = n
+            new_rem[slot] = max(r.max_new_tokens - 1, 0)
+            r.slot = slot
+            self.slot_req[slot] = r
+        # Admission consults the policy engine: KV residency for the current
+        # occupancy and the (PlanCache-memoized) decode-attention plan.
+        self.decode_plan = self._plan_decode()
+        self.cache, self.cur_tok, self.remaining, nxt = self._prefill(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(seg),
+            self.cur_tok, self.remaining, jnp.asarray(new_rem),
+        )
+        first = np.asarray(nxt)                # host sync: 1 per wave
+        self.stats["host_syncs"] += 1
+        self.stats["admission_waves"] += 1
+        now = time.perf_counter()
+        for r in wave:
+            r.generated.append(int(first[r.slot]))
+            self.stats["prefill_tokens"] += 1
+            if r.ttft_s is None and r.submit_t is not None:
+                r.ttft_s = now - r.submit_t
             if len(r.generated) >= r.max_new_tokens:
-                r.done = True
-                finished.append(slot)
-        for slot in finished:
-            del self.live[slot]
+                self._finish(r)
+
+    def _run_chunk(self) -> None:
+        self.cache, self.cur_tok, self.remaining, toks, actives = (
+            self._decode_chunk(
+                self.params, self.cache, self.cur_tok, self.remaining
+            )
+        )
+        t_np, a_np = jax.device_get((toks, actives))   # host sync: 1 per chunk
+        self.stats["host_syncs"] += 1
+        self.stats["decode_syncs"] += 1
+        self.stats["chunks"] += 1
+        for slot, r in self._live():
+            emitted = a_np[:, slot]
+            for i in np.nonzero(emitted)[0]:
+                r.generated.append(int(t_np[i, slot]))
+            self.stats["decode_tokens"] += int(emitted.sum())
+            if len(r.generated) >= r.max_new_tokens:
+                self._finish(r)
+
+    def drain(self) -> None:
+        """Run admission + chunked decode until queue and slots are empty."""
+        while self.queue or self.slot_req.count(None) < self.slots:
+            self._admit_wave()
+            if self.slot_req.count(None) < self.slots:
+                self._run_chunk()
 
     def run(self, requests: list[Request]) -> list[Request]:
-        self.admit(requests)
-        while self.live:
-            self.step()
+        self.submit(requests)
+        self.drain()
         return requests
