@@ -14,9 +14,12 @@ figure-specific metrics.
                              pure-Python path (``--no-compare-seed`` skips)
 * ``sweep_speedup``        — seed / fast
 * ``plan_cache_hit_rate``  + full ``plan_cache`` / ``sweep_table`` counters
-* ``serve_tok_s`` / ``serve_ttft_s`` / ``host_syncs_per_token`` /
-  ``seed_tok_s`` / ``serve_speedup`` — the device-resident chunked serve
-  loop vs the seed per-token dispatch loop (``benchmarks.serve_bench``)
+* ``serve_tok_s`` / ``serve_ttft_s`` / ``serve_queue_wait_s`` /
+  ``host_syncs_per_token`` / ``seed_tok_s`` / ``serve_speedup`` — the
+  device-resident chunked serve loop vs the seed per-token dispatch loop
+  (``benchmarks.serve_bench``)
+* ``serve_families`` — per-cache-family serve rows with paged-vs-
+  contiguous bit-identity asserted where a KV cache exists
 
 so BENCH_*.json files can track the planning-pipeline and serving perf
 trajectories across PRs.  ``--analytic-only`` skips the measured (jit
@@ -111,6 +114,18 @@ def main(argv=None) -> None:
                 chunk_size=args.serve_chunk, reps=max(1, args.reps)
             )
             _emit(serve_rows, rows)
+            # Paged pool at 2.67x effective capacity (mixed long/short) +
+            # cache-family breadth, asserting paged-vs-contiguous
+            # bit-identity where a KV cache exists (AssertionError fails
+            # the run — the CI serve-identity gate).
+            paged_rows, paged_summary = serve_bench.paged_rows(
+                chunk_size=args.serve_chunk, reps=max(1, args.reps)
+            )
+            _emit(paged_rows, rows)
+            family_rows, family_summary = serve_bench.family_rows()
+            _emit(family_rows, rows)
+            serve_summary = {**serve_summary, **paged_summary,
+                             **family_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 

@@ -10,13 +10,24 @@ class the paper's Uncached policy targets.
 Emitted metrics (also merged into ``benchmarks.run --json`` output):
 
 * ``serve_tok_s``          — chunked engine, total tokens / wall
-* ``serve_ttft_s``         — mean submit→first-token latency, warm
+* ``serve_ttft_s``         — mean admission→first-token latency (prefill
+                             compute), warm
+* ``serve_queue_wait_s``   — mean submit→admission latency (queueing only)
 * ``host_syncs_per_token`` — total syncs / total tokens (chunked)
 * ``seed_tok_s``           — per-token dispatch loop, total tokens / wall
 * ``serve_speedup``        — serve_tok_s / seed_tok_s
+* ``serve_families``       — per-arch breadth rows (mamba2/zamba2/whisper
+                             cache families) with paged-vs-contiguous
+                             bit-identity asserted where a KV cache exists,
+                             plus paged/contiguous throughput ratio
+
+``python -m benchmarks.serve_bench --identity-only`` runs only the
+paged-vs-contiguous bit-identity checks (the CI gate) and exits nonzero
+on any mismatch.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -33,6 +44,41 @@ CHUNK = 16
 N_REQUESTS = 8
 # 1 prefill token + 32 decode tokens = exactly two full chunks per slot.
 MAX_NEW = 33
+# Mixed long/short workload for the paged-pool leg: alternating budgets so
+# short requests return pages while long ones keep decoding.
+MAX_NEW_SHORT = 9
+PAGED_PAGE = 16
+# The paged leg provisions max_len for the worst tolerated request (128)
+# but backs it with a pool sized to the workload's worst-case concurrent
+# footprint: every request needs <= 41 positions -> 3 pages, 4 slots -> 12
+# pages x 16 = 192 pooled positions vs 4 x 128 = 512 contiguous — 2.67x
+# effective capacity with no admission gating, which is the paged layout's
+# point: one long request's worst case no longer dictates every slot's
+# HBM reservation.
+PAGED_MAX_LEN = 128
+PAGED_POOL = 12
+# The d=64/L=2 smoke model is a worst case for layout overhead (the page
+# gather is comparable to the whole layer's compute); the steady-state
+# throughput comparison runs at a scale where per-layer compute resembles
+# serving reality relative to KV traffic.
+PAGED_BENCH_DIMS = dict(n_layers=4, d_model=256, d_ff=512, n_heads=8,
+                        n_kv_heads=4, head_dim=32)
+
+# Breadth sweep: one arch per serving cache family beyond the dense smoke
+# config.  has_kv gates the paged-vs-contiguous identity check (mamba2's
+# decode state is O(1) — nothing to page).
+FAMILY_ARCHS = (
+    ("qwen2.5-32b", True),       # dense GQA KV
+    ("mamba2-1.3b", False),      # pure SSM: conv window + SSD state
+    ("zamba2-2.7b", True),       # hybrid: shared-attention KV + SSM
+    ("whisper-small", True),     # enc-dec: self KV + resident cross KV
+)
+FAMILY_SLOTS = 2
+FAMILY_MAX_LEN = 32
+FAMILY_PAGE = 8
+# Pooled page budget: 5 pages x 8 tokens = 40 positions < slots x max_len
+# = 64 — the oversubscription the paged layout exists for.
+FAMILY_POOL = 5
 
 
 def _requests(cfg, seed=0):
@@ -122,6 +168,9 @@ def serve_rows(chunk_size: int = CHUNK, reps: int = 3):
             ttft = float(np.mean(
                 [r.ttft_s for r in reqs if r.ttft_s is not None]
             ))
+            queue_wait = float(np.mean(
+                [r.queue_wait_s for r in reqs if r.queue_wait_s is not None]
+            ))
         delta = {k: eng.stats[k] - base[k] for k in eng.stats}
     serve_tokens = delta["decode_tokens"] + delta["prefill_tokens"]
     serve_tok_s = serve_tokens / serve_wall
@@ -147,6 +196,7 @@ def serve_rows(chunk_size: int = CHUNK, reps: int = 3):
         "serve_chunk_size": chunk_size,
         "serve_tok_s": serve_tok_s,
         "serve_ttft_s": ttft,
+        "serve_queue_wait_s": queue_wait,
         "host_syncs_per_token": syncs_per_tok,
         "seed_tok_s": seed_tok_s,
         "seed_syncs_per_token": seed_syncs / seed_tokens,
@@ -154,7 +204,7 @@ def serve_rows(chunk_size: int = CHUNK, reps: int = 3):
     }
     rows = [
         {"name": "serve/chunked", "us_per_call": serve_wall * 1e6 / serve_tokens,
-         "tok_s": serve_tok_s, "ttft_s": ttft,
+         "tok_s": serve_tok_s, "ttft_s": ttft, "queue_wait_s": queue_wait,
          "host_syncs_per_token": syncs_per_tok},
         {"name": "serve/seed_per_token",
          "us_per_call": seed_wall * 1e6 / seed_tokens,
@@ -164,10 +214,194 @@ def serve_rows(chunk_size: int = CHUNK, reps: int = 3):
     return rows, summary
 
 
+# ---------------------------------------------------------------------------
+# Paged pool under oversubscription (the acceptance workload)
+# ---------------------------------------------------------------------------
+
+def _mixed_requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(4, 10, size=N_REQUESTS)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32),
+                max_new_tokens=MAX_NEW if i % 2 == 0 else MAX_NEW_SHORT)
+        for i, n in enumerate(lens)
+    ]
+
+
+def paged_rows(chunk_size: int = CHUNK, reps: int = 3, warm: bool = True):
+    """Mixed long/short workload through a page pool at 2.67x effective
+    capacity (192 pooled positions backing 4 slots x max_len 128).
+    Asserts bit-identity and reports steady-state paged/contiguous
+    throughput — the paged layout must stay within ~10% while pooling
+    HBM across slots.  ``warm=False`` (the CI identity gate) skips the
+    compile-absorbing warm-up wave."""
+    cfg = dataclasses.replace(
+        get_config(SERVE_ARCH, smoke=True), **PAGED_BENCH_DIMS
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok_s, outs = {}, {}
+    for layout in ("contiguous", "paged"):
+        if layout == "paged":
+            c = dataclasses.replace(cfg, cache_layout="paged",
+                                    kv_page_size=PAGED_PAGE)
+            kw = {"n_pages": PAGED_POOL}
+        else:
+            c, kw = cfg, {}
+        eng = ServeEngine(c, params, batch_slots=SLOTS,
+                          max_len=PAGED_MAX_LEN, chunk_size=chunk_size, **kw)
+        if warm:
+            eng.run(_mixed_requests(cfg, seed=0))     # warm/compile
+        best = 0.0
+        for _ in range(max(1, reps)):
+            reqs = _mixed_requests(cfg, seed=1)
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            wall = time.perf_counter() - t0
+            best = max(best, sum(len(r.generated) for r in reqs) / wall)
+        tok_s[layout] = best
+        outs[layout] = [r.generated for r in reqs]
+    assert outs["paged"] == outs["contiguous"], (
+        "paged != contiguous on the mixed long/short workload"
+    )
+    ratio = tok_s["paged"] / tok_s["contiguous"]
+    eff = (SLOTS * PAGED_MAX_LEN) / (PAGED_POOL * PAGED_PAGE)
+    row = {
+        "name": "serve/paged_mixed",
+        "us_per_call": 1e6 / tok_s["paged"],
+        "tok_s": tok_s["paged"],
+        "contiguous_tok_s": tok_s["contiguous"],
+        "paged_over_contiguous": ratio,
+        "effective_capacity_x": eff,
+        "bit_identical": True,
+    }
+    summary = {
+        "serve_paged_tok_s": tok_s["paged"],
+        "serve_paged_over_contiguous": ratio,
+        "serve_paged_effective_capacity_x": eff,
+    }
+    return [row], summary
+
+
+# ---------------------------------------------------------------------------
+# Cache-family breadth + paged-vs-contiguous bit-identity
+# ---------------------------------------------------------------------------
+
+def _family_extras(cfg):
+    if cfg.family == "encdec":
+        return {"frames": np.asarray(jax.random.normal(
+            jax.random.PRNGKey(4),
+            (FAMILY_SLOTS, cfg.enc_seq, cfg.d_model), jnp.float32,
+        ))}
+    if cfg.family == "vlm":
+        return {"vis": np.asarray(jax.random.normal(
+            jax.random.PRNGKey(3),
+            (FAMILY_SLOTS, cfg.n_vis_tokens, cfg.d_model), jnp.float32,
+        ))}
+    return {}
+
+
+def _family_requests(cfg, seed):
+    rng = np.random.default_rng(seed)
+    spec = [(4, 9), (8, 3), (5, 6), (3, 8)]     # mixed lengths + budgets
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in spec
+    ]
+
+
+def _timed_run(eng, reqs):
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    wall = time.perf_counter() - t0
+    return sum(len(r.generated) for r in reqs) / wall
+
+
+def family_rows(identity_only: bool = False):
+    """One row per serving cache family.  Where a KV cache exists, the same
+    request mix runs through a paged engine whose pool is SMALLER than
+    slots x max_len; outputs must be bit-identical to the contiguous
+    layout (greedy, same weights — any divergence is a layout bug).
+
+    ``identity_only`` (the CI gate) skips warm-up waves and throughput
+    accounting: identity needs exactly one run per layout."""
+    rows = []
+    summary = {}
+    for arch, has_kv in FAMILY_ARCHS:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        extras = _family_extras(cfg)
+
+        def engine(c, **kw):
+            return ServeEngine(c, params, batch_slots=FAMILY_SLOTS,
+                               max_len=FAMILY_MAX_LEN, chunk_size=4,
+                               extras=extras, **kw)
+
+        eng = engine(cfg)
+        row = {"name": f"serve/family_{arch}"}
+        reqs = _family_requests(cfg, seed=1)
+        if identity_only:
+            eng.run(reqs)
+        else:
+            eng.run(_family_requests(cfg, seed=0))      # warm/compile
+            tok_s = _timed_run(eng, reqs)
+            row.update({"tok_s": tok_s, "us_per_call": 1e6 / tok_s})
+        if has_kv:
+            paged_cfg = dataclasses.replace(
+                cfg, cache_layout="paged", kv_page_size=FAMILY_PAGE
+            )
+            peng = engine(paged_cfg, n_pages=FAMILY_POOL)
+            preqs = _family_requests(cfg, seed=1)
+            if identity_only:
+                peng.run(preqs)
+            else:
+                peng.run(_family_requests(cfg, seed=0))  # warm/compile
+                paged_tok_s = _timed_run(peng, preqs)
+                row.update({
+                    "paged_tok_s": paged_tok_s,
+                    "paged_over_contiguous": paged_tok_s / tok_s,
+                })
+            mismatches = [
+                (a.generated, b.generated)
+                for a, b in zip(reqs, preqs) if a.generated != b.generated
+            ]
+            assert not mismatches, (
+                f"serve bit-identity violated for {arch}: paged != "
+                f"contiguous on {len(mismatches)} request(s): {mismatches[0]}"
+            )
+            row.update({
+                "paged_pool_positions": FAMILY_POOL * FAMILY_PAGE,
+                "contiguous_positions": FAMILY_SLOTS * FAMILY_MAX_LEN,
+                "bit_identical": True,
+            })
+        rows.append(row)
+        summary[arch] = {k: v for k, v in row.items() if k != "name"}
+        if identity_only:
+            print(f"{arch}: "
+                  + ("bit-identical (paged == contiguous)" if has_kv
+                     else "no KV cache (contiguous only)"))
+    return rows, {"serve_families": summary}
+
+
 if __name__ == "__main__":
+    import argparse
     import json
 
-    rows, summary = serve_rows()
-    for r in rows:
-        print(r)
-    print(json.dumps(summary, indent=1))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--identity-only", action="store_true",
+                    help="run only the paged-vs-contiguous bit-identity "
+                         "checks (CI gate); nonzero exit on mismatch")
+    args = ap.parse_args()
+    if args.identity_only:
+        family_rows(identity_only=True)
+        paged_rows(reps=1, warm=False)
+        print("serve bit-identity: PASS")
+    else:
+        rows, summary = serve_rows()
+        prows, psummary = paged_rows()
+        frows, fsummary = family_rows()
+        for r in rows + prows + frows:
+            print(r)
+        print(json.dumps({**summary, **psummary, **fsummary}, indent=1))

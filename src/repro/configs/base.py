@@ -42,6 +42,11 @@ class ModelConfig:
     # VLM: cross-attention to vision tokens every k layers
     cross_attn_every: int = 0
     n_vis_tokens: int = 1600
+    # KV cache layout (serving): "contiguous" reserves a per-slot
+    # (max_len, hkv, dh) ring; "paged" pools capacity into fixed-size pages
+    # shared across slots via a per-slot page table (DESIGN.md §5.2).
+    cache_layout: str = "contiguous"   # "contiguous" | "paged"
+    kv_page_size: int = 16             # tokens per page ("paged" only)
     # Numerics / sharding
     dtype: str = "bfloat16"
     vocab_pad_multiple: int = 2048   # pad vocab so `model` axis (16) divides it

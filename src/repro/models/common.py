@@ -349,6 +349,78 @@ def append_kv(cache_kv: jnp.ndarray, new: jnp.ndarray, lengths: jnp.ndarray,
     )
 
 
+# ---------------------------------------------------------------------------
+# Paged KV layout (DESIGN.md §5.2): K/V live in an (n_pages, page_size, ...)
+# pool shared across slots; a per-slot page table (b, pages_per_slot) maps
+# logical page indices to physical page ids (-1 = unmapped).  The serve
+# engine's host-side free-list assigns pages at admission, so HBM cost
+# follows each request's actual footprint instead of slots x max_len.
+# ---------------------------------------------------------------------------
+
+def paged_kv_spec(batch: int, max_len: int, page_size: int,
+                  n_pages: int | None = None) -> tuple[int, int]:
+    """(pages_per_slot, n_pages) for a paged pool over ``batch`` slots.
+
+    ``n_pages`` None sizes the pool to full contiguous capacity (every slot
+    can hold max_len); the serve engine passes a smaller pool to
+    oversubscribe."""
+    per_slot = -(-max_len // page_size)
+    return per_slot, (batch * per_slot if n_pages is None else n_pages)
+
+
+def paged_kv_buffers(lead: tuple, batch: int, max_len: int, cfg,
+                     n_pages: int | None = None):
+    """Zeroed paged K/V pool with leading stack axes ``lead``, plus the
+    all-unmapped (batch, pages_per_slot) page table — the shared cache-init
+    path for every paged cache family."""
+    per_slot, N = paged_kv_spec(batch, max_len, cfg.kv_page_size, n_pages)
+    shape = (*lead, N, cfg.kv_page_size, cfg.n_kv_heads, cfg.head_dim_)
+    dt = jnp.dtype(cfg.dtype)
+    kv = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    return kv, jnp.full((batch, per_slot), -1, jnp.int32)
+
+
+def append_kv_paged(pool: jnp.ndarray, new: jnp.ndarray, lengths: jnp.ndarray,
+                    seg_lens: jnp.ndarray | None,
+                    pages: jnp.ndarray) -> jnp.ndarray:
+    """Scatter a (b, s, ...) block into an (N, page_size, ...) page pool.
+
+    Row i of slot b lands at logical position ``lengths[b] + i``, translated
+    through ``pages`` (b, P) to physical page ``pages[b, pos // page_size]``,
+    offset ``pos % page_size``.  Invalid rows (i >= seg_lens[b]), positions
+    beyond the mapped page range, and unmapped pages (-1) all redirect to
+    physical page N and are DROPPED by the scatter — the paged twin of
+    :func:`append_kv`'s overflow semantics."""
+    b, s = new.shape[:2]
+    N, psz = pool.shape[0], pool.shape[1]
+    P = pages.shape[1]
+    pos = lengths[:, None] + jnp.arange(s)[None, :]           # (b, s)
+    pi, wi = pos // psz, pos % psz
+    phys = jnp.take_along_axis(pages, jnp.clip(pi, 0, P - 1), axis=1)
+    drop = (pi >= P) | (phys < 0)
+    valid = seg_mask(s, seg_lens)
+    if valid is not None:
+        drop = drop | ~valid
+    phys = jnp.where(drop, N, phys)
+    return pool.at[phys.reshape(-1), wi.reshape(-1)].set(
+        new.reshape((b * s,) + new.shape[2:]).astype(pool.dtype), mode="drop"
+    )
+
+
+def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
+    """(N, page_size, ...) pool + (b, P) table -> dense (b, P*page_size, ...).
+
+    Unmapped entries (-1) clamp to page 0: their content is garbage by
+    contract and masked by the caller's ``kv_len``, exactly like the stale
+    tail bytes of the contiguous ring.  With page_size dividing max_len the
+    gathered width equals the contiguous ring width, so the downstream
+    online-softmax is bit-identical between layouts."""
+    N, psz = pool.shape[0], pool.shape[1]
+    b, P = pages.shape
+    g = jnp.take(pool, jnp.clip(pages, 0, N - 1), axis=0)     # (b, P, psz, ...)
+    return g.reshape((b, P * psz) + pool.shape[2:])
+
+
 def apply_attn(
     p: Params,
     x: jnp.ndarray,                   # (b, s, d)
@@ -387,9 +459,18 @@ def apply_attn(
             # masked out via kv_len below and overwritten as the cursor
             # advances.
             lengths = cache["lengths"]
-            kc = append_kv(cache["k"], k, lengths, seg_lens)
-            vc = append_kv(cache["v"], v, lengths, seg_lens)
-            k, v = kc, vc
+            if "pages" in cache:
+                # Paged pool: scatter through the page table, then gather a
+                # dense per-slot view for the same masked online-softmax.
+                pages = cache["pages"]
+                kc = append_kv_paged(cache["k"], k, lengths, seg_lens, pages)
+                vc = append_kv_paged(cache["v"], v, lengths, seg_lens, pages)
+                k = gather_pages(kc, pages)
+                v = gather_pages(vc, pages)
+            else:
+                kc = append_kv(cache["k"], k, lengths, seg_lens)
+                vc = append_kv(cache["v"], v, lengths, seg_lens)
+                k, v = kc, vc
             kv_len = lengths + (
                 jnp.int32(s) if seg_lens is None else seg_lens
             )
@@ -636,16 +717,28 @@ def reset_lengths(cache: Params, mask: jnp.ndarray) -> Params:
 
 def reset_recurrent(cache: Params, mask: jnp.ndarray,
                     state_keys: tuple = ("ssm", "conv")) -> Params:
-    """reset_lengths plus zeroed recurrent-state leaves (batch on axis 1).
+    """reset_lengths plus zeroed recurrent-state leaves.
 
     Unlike KV buffers, SSM/conv state has no validity mask — a re-admitted
-    slot must start from genuinely zero state.  Leaves not named in
-    ``state_keys`` (e.g. zamba2's "kv") pass through untouched."""
+    slot must start from genuinely zero state.  Each ``state_keys`` entry is
+    either a key (batch expected on axis 1, the (L, b, ...) stacked-layer
+    layout) or a ``(key, axis)`` pair; the leaf's shape is checked against
+    the mask so a cache family with a different batch axis fails loudly
+    instead of silently corrupting parked slots.  Leaves not named (e.g.
+    zamba2's "kv") pass through untouched."""
     out = reset_lengths(cache, mask)
+    b = mask.shape[0]
     keep = ~mask
-    for key in state_keys:
+    for entry in state_keys:
+        key, axis = entry if isinstance(entry, tuple) else (entry, 1)
         leaf = cache[key]
-        out[key] = leaf * keep.astype(leaf.dtype).reshape(
-            (1, -1) + (1,) * (leaf.ndim - 2)
-        )
+        if leaf.ndim <= axis or leaf.shape[axis] != b:
+            raise ValueError(
+                f"reset_recurrent: cache leaf '{key}' has shape "
+                f"{tuple(leaf.shape)} but the batch axis ({axis}) must have "
+                f"size {b}; pass (key, axis) in state_keys for this layout"
+            )
+        shape = [1] * leaf.ndim
+        shape[axis] = b
+        out[key] = leaf * keep.astype(leaf.dtype).reshape(shape)
     return out

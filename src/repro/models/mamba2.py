@@ -232,7 +232,10 @@ def loss_fn(params, batch, cfg: ModelConfig,
     return ce + aux, {"ce": ce, "aux": aux}
 
 
-def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
+               n_pages=None):
+    """``n_pages`` is accepted for serve-engine API uniformity; mamba2's
+    decode state is O(1) per slot (no KV), so there is nothing to page."""
     h, ds, dh = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
     conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
     L = cfg.n_layers

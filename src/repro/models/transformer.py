@@ -138,8 +138,22 @@ def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache,
     layer (each layer sees the same tokens); per-layer caches carry only
     the K/V buffers."""
     lengths = cache["lengths"]
+    pages = cache.get("pages")            # paged layout: (b, P) page table
     s = x.shape[1]
     new_lengths = lengths + (s if seg_lens is None else seg_lens)
+
+    def kv_in(lc):
+        c = {"k": lc["k"], "v": lc["v"], "lengths": lengths}
+        if pages is not None:
+            c["pages"] = pages
+        return c
+
+    def out_cache(layers):
+        out = {"layers": layers, "lengths": new_lengths}
+        if pages is not None:
+            out["pages"] = pages
+        return out
+
     if cfg.cross_attn_every:
         def group_body(h, inp):
             gp, gcache = inp
@@ -147,8 +161,7 @@ def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache,
             def one_self(hh, inp2):
                 lp, lc = inp2
                 hh, _, nc = _self_block(
-                    lp, hh, cfg, positions,
-                    cache={"k": lc["k"], "v": lc["v"], "lengths": lengths},
+                    lp, hh, cfg, positions, cache=kv_in(lc),
                     seg_lens=seg_lens,
                 )
                 return hh, nc
@@ -159,10 +172,13 @@ def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache,
             # The nested scan's stacked KV output loses its sharding
             # through the outer while loop, replicating per-chip temps
             # ~33x the cache size (EXPERIMENTS.md §Perf S2).  Pin it.
+            # Contiguous (span, b, S, hkv, dh) shards batch over "data";
+            # the paged pool (span, N, psz, hkv, dh) has no batch axis —
+            # any slot may reference any page — so only heads are pinned.
+            spec = ((None, None, None, ("model",), None) if pages is not None
+                    else (None, ("data",), ("model",), None, None))
             for key in ("k", "v"):
-                new_self[key] = cm._maybe_shard(
-                    new_self[key], (None, ("data",), ("model",), None, None)
-                )
+                new_self[key] = cm._maybe_shard(new_self[key], spec)
             h, new_cross = _cross_block(
                 gp["cross"], h, cfg, positions, vis, cache=gcache["cross"]
             )
@@ -173,19 +189,17 @@ def _stack_cached(params, x, cfg: ModelConfig, positions, vis, cache,
             ({"self": params["self_layers"], "cross": params["cross_layers"]},
              cache["layers"]),
         )
-        return x, {"layers": new_cache, "lengths": new_lengths}
+        return x, out_cache(new_cache)
 
     def body(h, inp):
         lp, lc = inp
         h, _, nc = _self_block(
-            lp, h, cfg, positions,
-            cache={"k": lc["k"], "v": lc["v"], "lengths": lengths},
-            seg_lens=seg_lens,
+            lp, h, cfg, positions, cache=kv_in(lc), seg_lens=seg_lens,
         )
         return h, nc
 
     x, new_layers = cm.scan(body, x, (params["layers"], cache["layers"]))
-    return x, {"layers": new_layers, "lengths": new_lengths}
+    return x, out_cache(new_layers)
 
 
 # ---------------------------------------------------------------------------
@@ -214,15 +228,26 @@ def loss_fn(params, batch, cfg: ModelConfig,
     return ce + aux, {"ce": ce, "aux": aux}
 
 
-def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
+               n_pages=None):
     hkv, dh = cfg.n_kv_heads, cfg.head_dim_
     dt = jnp.dtype(cfg.dtype)
+    pages = None
 
-    def kv(n):
-        return {
-            "k": jnp.zeros((n, batch, max_len, hkv, dh), dt),
-            "v": jnp.zeros((n, batch, max_len, hkv, dh), dt),
-        }
+    def kv(*lead):
+        nonlocal pages
+        if cfg.cache_layout == "paged":
+            kvs, pages = cm.paged_kv_buffers(lead, batch, max_len, cfg,
+                                             n_pages)
+            return kvs
+        shape = (*lead, batch, max_len, hkv, dh)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    def with_pages(cache):
+        cache["lengths"] = jnp.zeros((batch,), jnp.int32)
+        if pages is not None:
+            cache["pages"] = pages
+        return cache
 
     if cfg.cross_attn_every:
         g = cfg.n_layers // cfg.cross_attn_every
@@ -230,7 +255,8 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
         assert vis is not None, "vlm cache needs vision embeddings"
         visp = vis.astype(dt) @ params["vis_proj"]
         # Precompute cross K/V once per cross layer (reused every step —
-        # the RESIDENT operand of VLM decoding).
+        # the RESIDENT operand of VLM decoding).  Cross K/V stay contiguous
+        # regardless of layout: they are fixed-source and never appended.
         def cross_kv(lp):
             k = jnp.einsum("btd,dhk->bthk", visp, lp["attn"]["wk"])
             v = jnp.einsum("btd,dhk->bthk", visp, lp["attn"]["wv"])
@@ -240,14 +266,10 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
             return {"k": k, "v": v}
 
         cross = jax.vmap(cross_kv)(params["cross_layers"])
-        self_kv = {
-            "k": jnp.zeros((g, span, batch, max_len, hkv, dh), dt),
-            "v": jnp.zeros((g, span, batch, max_len, hkv, dh), dt),
-        }
-        return {"layers": {"self": self_kv, "cross": cross},
-                "lengths": jnp.zeros((batch,), jnp.int32), "vis": visp}
-    return {"layers": kv(cfg.n_layers),
-            "lengths": jnp.zeros((batch,), jnp.int32)}
+        return with_pages({
+            "layers": {"self": kv(g, span), "cross": cross}, "vis": visp,
+        })
+    return with_pages({"layers": kv(cfg.n_layers)})
 
 
 def prefill(params, cache, tokens, cfg: ModelConfig, vis=None, seg_lens=None):

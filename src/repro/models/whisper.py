@@ -129,7 +129,7 @@ def loss_fn(params, batch, cfg: ModelConfig,
 
 
 def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
-               frames=None):
+               frames=None, n_pages=None):
     """vis doubles as the encoder frames argument for API uniformity."""
     frames = frames if frames is not None else vis
     assert frames is not None, "whisper cache needs encoder frames"
@@ -144,19 +144,27 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
         return {"k": k, "v": v}
 
     cross = jax.vmap(cross_kv)(params["dec_layers"])
-    return {
-        "self": {
-            "k": jnp.zeros((L, batch, max_len, hkv, dh), dt),
-            "v": jnp.zeros((L, batch, max_len, hkv, dh), dt),
-        },
+    if cfg.cache_layout == "paged":
+        self_kv, pages = cm.paged_kv_buffers((L,), batch, max_len, cfg,
+                                             n_pages)
+    else:
+        shape = (L, batch, max_len, hkv, dh)
+        self_kv = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        pages = None
+    cache = {
+        "self": self_kv,
         "cross": cross,              # RESIDENT: reused by every decode step
         "lengths": jnp.zeros((batch,), jnp.int32),
     }
+    if pages is not None:
+        cache["pages"] = pages
+    return cache
 
 
 def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     b, s = tokens.shape
     lengths = cache["lengths"]
+    pages = cache.get("pages")
     positions = lengths[:, None] + jnp.arange(s)[None, :]     # (b, s)
     # Per-slot learned position rows (ragged cursors need a gather, not a
     # uniform dynamic slice); jnp.take clamps at the table edge.
@@ -167,6 +175,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     def body(h, inp):
         lp, sc, cc = inp
         self_cache = {"k": sc["k"], "v": sc["v"], "lengths": lengths}
+        if pages is not None:
+            self_cache["pages"] = pages
         h, new_self, _ = _dec_block(
             lp, h, cfg, positions, None, self_cache=self_cache, cross_cache=cc,
             seg_lens=seg_lens,
@@ -178,10 +188,13 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
     logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
-    return logits, {
+    new_cache = {
         "self": new_self, "cross": cache["cross"],
         "lengths": lengths + (s if seg_lens is None else seg_lens),
     }
+    if pages is not None:
+        new_cache["pages"] = pages
+    return logits, new_cache
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, seg_lens=None):

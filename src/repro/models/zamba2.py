@@ -96,21 +96,28 @@ def loss_fn(params, batch, cfg: ModelConfig,
     return ce + aux, {"ce": ce, "aux": aux}
 
 
-def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None):
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
+               n_pages=None):
     k = cfg.shared_attn_every
     g = cfg.n_layers // k
     h, ds, dh = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
     conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
     dt = jnp.dtype(cfg.dtype)
-    return {
+    if cfg.cache_layout == "paged":
+        kv, pages = cm.paged_kv_buffers((g,), batch, max_len, cfg, n_pages)
+    else:
+        kv_shape = (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        kv = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
+        pages = None
+    cache = {
         "ssm": jnp.zeros((cfg.n_layers, batch, h, ds, dh), jnp.float32),
         "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch), dt),
-        "kv": {
-            "k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dt),
-            "v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dt),
-        },
+        "kv": kv,
         "lengths": jnp.zeros((batch,), jnp.int32),
     }
+    if pages is not None:
+        cache["pages"] = pages
+    return cache
 
 
 def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
@@ -119,6 +126,7 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
     g = cfg.n_layers // k
     x = cm.embed(params["embed"], tokens)
     lengths = cache["lengths"]
+    pages = cache.get("pages")
     positions = lengths[:, None] + jnp.arange(s)[None, :]
     glayers = _group_view(params["layers"], g, k)
     gssm = cache["ssm"].reshape(g, k, *cache["ssm"].shape[1:])
@@ -138,6 +146,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
 
         h, (nssm, nconv) = cm.scan(one_mamba, h, (gp, ssm_g, conv_g))
         kv_in = {"k": kv_g["k"], "v": kv_g["v"], "lengths": lengths}
+        if pages is not None:
+            kv_in["pages"] = pages
         h, nkv = _shared_block(
             shared, h, cfg, positions, cache=kv_in, seg_lens=seg_lens
         )
@@ -156,6 +166,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
         "kv": {"k": nkv["k"], "v": nkv["v"]},
         "lengths": lengths + (s if seg_lens is None else seg_lens),
     }
+    if pages is not None:
+        new_cache["pages"] = pages
     return logits, new_cache
 
 

@@ -24,6 +24,12 @@ loop, not the policy search, is the artifact that must be fast):
   scatter, so mixed-length prompts never cross-contaminate).
 * **Donated buffers** — the cache (and the per-slot token/budget vectors)
   are donated to each dispatch, so KV updates are in-place on device.
+* **Paged KV pool** (``cfg.cache_layout == "paged"``, DESIGN.md §5.2) —
+  K/V capacity is pooled into fixed-size pages shared across slots; a
+  host-side free-list assigns each admitted request exactly the pages its
+  worst case needs and admission gates on free pages, so a pool smaller
+  than ``slots x max_len`` serves mixed long/short traffic while staying
+  bit-identical to the contiguous ring.
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ from repro.configs.base import ModelConfig
 from repro.core import CachePolicyEngine, make_engine
 from repro.core.characterize import attention_op
 from repro.models import build_model
+from repro.models.common import paged_kv_spec
 
 
 @dataclasses.dataclass
@@ -50,8 +57,10 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
-    ttft_s: float | None = None   # submit -> first token wall time
+    ttft_s: float | None = None        # admission -> first token (prefill)
+    queue_wait_s: float | None = None  # submit -> admission (queueing only)
     submit_t: float | None = None
+    admit_t: float | None = None
 
 
 def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
@@ -79,7 +88,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
                  max_len: int, extras: dict[str, Any] | None = None,
                  policy_engine: CachePolicyEngine | None = None,
-                 chunk_size: int = 8):
+                 chunk_size: int = 8, n_pages: int | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -87,6 +96,32 @@ class ServeEngine:
         self.max_len = max_len
         self.chunk_size = max(1, chunk_size)
         self.extras = extras or {}
+        # Paged KV layout (DESIGN.md §5.2): K/V capacity is pooled into
+        # fixed-size pages shared across slots; this host-side free-list
+        # assigns each admitted request exactly the pages its worst case
+        # needs (prompt + budget), so a pool smaller than slots x max_len
+        # serves mixed long/short traffic.  ``n_pages`` None sizes the pool
+        # to full contiguous capacity.
+        self.paged = cfg.cache_layout == "paged"
+        cache_kwargs = dict(self.extras)
+        if self.paged:
+            psz = cfg.kv_page_size
+            assert max_len % psz == 0, (
+                f"max_len={max_len} must be a multiple of kv_page_size={psz} "
+                "so the gathered page view is bit-identical to the "
+                "contiguous ring"
+            )
+            self.page_size = psz
+            self.pages_per_slot, self.n_pages = paged_kv_spec(
+                batch_slots, max_len, psz, n_pages
+            )
+            self.free_pages = list(range(self.n_pages))
+            self.page_table = np.full(
+                (batch_slots, self.pages_per_slot), -1, np.int32
+            )
+            self._slot_pages: list[list[int]] = [[] for _ in range(batch_slots)]
+            cache_kwargs["n_pages"] = self.n_pages
+        self._cache_kwargs = cache_kwargs
         # Capacity-based MoE dispatch lets right-pad/parked garbage tokens
         # compete with valid tokens for expert capacity (silent drops);
         # serving requires the per-token dense dispatch (DESIGN.md §5.1).
@@ -102,8 +137,16 @@ class ServeEngine:
         # hot path).
         self.decode_plan = self._plan_decode()
         self.cache = self.model.init_cache(
-            params, batch=batch_slots, max_len=max_len, **self.extras
+            params, batch=batch_slots, max_len=max_len, **self._cache_kwargs
         )
+        if self.paged and "pages" not in self.cache:
+            # Cache family with no KV to page (mamba2's decode state is
+            # O(1) per slot): fall back to contiguous bookkeeping rather
+            # than gating admission on a phantom page pool.
+            self.paged = False
+            self.kv_residency = self.policy.kv_policy(
+                self._kv_bytes_per_layer()
+            )
         self._reset_slots = self.model.reset_slots
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1, 4, 5))
         self._decode_chunk = jax.jit(self._chunk_fn, donate_argnums=(1, 2, 3))
@@ -125,8 +168,13 @@ class ServeEngine:
     # -- policy ------------------------------------------------------------
 
     def _kv_bytes_per_layer(self) -> int:
+        """Real per-layer KV footprint, so residency planning sees the bytes
+        actually allocated: the paged pool's n_pages x page_size positions,
+        not the contiguous worst case of slots x max_len."""
         kv_heads = max(1, self.cfg.n_kv_heads)
-        return (2 * self.slots * self.max_len * kv_heads
+        positions = (self.n_pages * self.page_size if self.paged
+                     else self.slots * self.max_len)
+        return (2 * positions * kv_heads
                 * self.cfg.head_dim_ * hw.dtype_bytes(self.cfg.dtype))
 
     def _plan_decode(self):
@@ -143,8 +191,19 @@ class ServeEngine:
         report = {
             "kv_bytes_per_layer": self._kv_bytes_per_layer(),
             "kv_residency": self.kv_residency.value,
+            # Effective layout: "contiguous" when a paged request met a
+            # cache family with no KV to page (see __init__ fallback).
+            "cache_layout": "paged" if self.paged else "contiguous",
             "plan_cache": self.policy.plan_stats(),
         }
+        if self.paged:
+            report["paged_kv"] = {
+                "n_pages": self.n_pages,
+                "page_size": self.page_size,
+                "free_pages": len(self.free_pages),
+                "pool_positions": self.n_pages * self.page_size,
+                "contiguous_positions": self.slots * self.max_len,
+            }
         if self.decode_plan is not None:
             report["decode_attention"] = {
                 "assignment": {
@@ -209,17 +268,42 @@ class ServeEngine:
 
     # -- host-side scheduling ----------------------------------------------
 
+    def _positions_needed(self, r: Request) -> int:
+        """Worst-case cache positions: the prompt plus every decoded token
+        except the last sampled one (which is never written back)."""
+        return len(r.prompt) + r.max_new_tokens - 1
+
+    def _pages_needed(self, r: Request) -> int:
+        return -(-self._positions_needed(r) // self.page_size)
+
     def submit(self, requests: list[Request]) -> None:
+        # Validate the whole batch before enqueuing any of it, so a
+        # rejected request doesn't leave earlier ones half-submitted.
         for r in requests:
+            if r.max_new_tokens < 1:
+                # Admission always emits the prefill-sampled first token, so
+                # a zero budget would generate one token anyway — reject
+                # instead of silently over-generating.
+                raise ValueError(
+                    f"max_new_tokens must be >= 1, got {r.max_new_tokens} "
+                    "(prefill emits the first token at admission)"
+                )
             assert len(r.prompt) > 0, (
                 "empty prompt: seg_lens==0 marks a parked slot, so a "
                 "zero-length admission would never start decoding"
             )
-            need = len(r.prompt) + max(r.max_new_tokens - 1, 0)
+            need = self._positions_needed(r)
             assert need <= self.max_len, (
                 f"request needs {need} cache positions, max_len={self.max_len}"
             )
-            r.submit_t = time.perf_counter()
+            if self.paged:
+                assert self._pages_needed(r) <= self.n_pages, (
+                    f"request needs {self._pages_needed(r)} pages, pool has "
+                    f"{self.n_pages} — it could never be admitted"
+                )
+        now = time.perf_counter()
+        for r in requests:
+            r.submit_t = now
             self.queue.append(r)
 
     def _live(self) -> list[tuple[int, Request]]:
@@ -228,24 +312,58 @@ class ServeEngine:
     def _finish(self, r: Request) -> None:
         r.done = True
         self.slot_req[r.slot] = None
+        if self.paged:
+            # Return the slot's pages to the pool.  The device page table is
+            # refreshed lazily at the next admission wave; until then the
+            # stale row is harmless — the parked slot neither writes KV
+            # (seg_lens == 0 drops the scatter) nor has its output read.
+            self.free_pages.extend(self._slot_pages[r.slot])
+            self._slot_pages[r.slot] = []
+            self.page_table[r.slot] = -1
 
     def _admit_wave(self) -> None:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
-        take = min(len(free), len(self.queue))
-        if take == 0:
+        now = time.perf_counter()
+        wave: list[tuple[int, Request]] = []
+        for slot in free:
+            if not self.queue:
+                break
+            if self.paged:
+                # Admission gates on free pages (FIFO head-of-line: a
+                # request that doesn't fit waits for pages to free rather
+                # than being overtaken).
+                need = self._pages_needed(self.queue[0])
+                if need > len(self.free_pages):
+                    break
+                r = self.queue.popleft()
+                ids = [self.free_pages.pop() for _ in range(need)]
+                self._slot_pages[slot] = ids
+                self.page_table[slot] = -1
+                self.page_table[slot, :need] = ids
+            else:
+                r = self.queue.popleft()
+            r.admit_t = now
+            if r.submit_t is not None:
+                r.queue_wait_s = now - r.submit_t
+            wave.append((slot, r))
+        if not wave:
             return
-        wave = [self.queue.popleft() for _ in range(take)]
-        pad = _pad_bucket(max(len(r.prompt) for r in wave), self.max_len)
+        pad = _pad_bucket(max(len(r.prompt) for _, r in wave), self.max_len)
         toks = np.zeros((self.slots, pad), np.int32)
         seg = np.zeros((self.slots,), np.int32)
         new_rem = np.zeros((self.slots,), np.int32)
-        for slot, r in zip(free, wave):
+        for slot, r in wave:
             n = len(r.prompt)
             toks[slot, :n] = r.prompt          # right-pad; scatter drops tail
             seg[slot] = n
-            new_rem[slot] = max(r.max_new_tokens - 1, 0)
+            new_rem[slot] = r.max_new_tokens - 1
             r.slot = slot
             self.slot_req[slot] = r
+        if self.paged:
+            # Push the host free-list's view of the page table to device.
+            # The table is tiny; replacing the leaf keeps the jitted prefill
+            # signature layout-independent (donation still applies).
+            self.cache = {**self.cache, "pages": jnp.asarray(self.page_table)}
         # Admission consults the policy engine: KV residency for the current
         # occupancy and the (PlanCache-memoized) decode-attention plan.
         self.decode_plan = self._plan_decode()
@@ -257,11 +375,13 @@ class ServeEngine:
         self.stats["host_syncs"] += 1
         self.stats["admission_waves"] += 1
         now = time.perf_counter()
-        for r in wave:
+        for _, r in wave:
             r.generated.append(int(first[r.slot]))
             self.stats["prefill_tokens"] += 1
-            if r.ttft_s is None and r.submit_t is not None:
-                r.ttft_s = now - r.submit_t
+            if r.ttft_s is None and r.admit_t is not None:
+                # True TTFT: admission -> first token (prefill compute);
+                # queueing is reported separately as queue_wait_s.
+                r.ttft_s = now - r.admit_t
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
 

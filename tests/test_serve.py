@@ -1,6 +1,9 @@
 """Serving engine tests: device-resident chunked decode vs full-forward
-rollouts — uniform, ragged (mixed prompt lengths), staggered budgets, and
-continuous re-admission into freed slots."""
+rollouts — uniform, ragged (mixed prompt lengths), staggered budgets,
+continuous re-admission into freed slots, and the paged KV pool
+(bit-identity vs the contiguous layout, free-page admission gating)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +11,12 @@ import pytest
 
 from repro.models import build_model, get_config
 from repro.serve.engine import Request, ServeEngine
+
+
+def _paged(cfg, page_size=8):
+    return dataclasses.replace(
+        cfg, cache_layout="paged", kv_page_size=page_size
+    )
 
 
 def _greedy_reference(model, params, prompt, n_tokens):
@@ -231,6 +240,233 @@ def test_parked_slot_state_untouched():
     np.testing.assert_array_equal(
         np.asarray(cache["conv"][:, 0]), np.asarray(cache2["conv"][:, 0])
     )
+
+
+def test_submit_rejects_zero_token_budget():
+    """Regression: admission always emits the prefill-sampled first token,
+    so max_new_tokens == 0 used to over-generate by one.  Reject at
+    submit instead."""
+    cfg = get_config("yi-9b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+    prompt = np.arange(4, dtype=np.int32) % cfg.vocab
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([Request(prompt=prompt, max_new_tokens=0)])
+    # The engine stays usable: a valid request still serves.
+    r = Request(prompt=prompt, max_new_tokens=2)
+    eng.run([r])
+    assert r.done and len(r.generated) == 2
+
+
+def test_queue_wait_separated_from_ttft():
+    """Regression: ttft_s used to be stamped submit→first-token, folding
+    queue wait into "TTFT".  Now queue_wait_s is submit→admission and
+    ttft_s is admission→first-token, per request."""
+    cfg = get_config("yi-9b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32, chunk_size=2)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+                max_new_tokens=5)
+        for _ in range(3)
+    ]
+    eng.run(reqs)
+    for r in reqs:
+        assert r.queue_wait_s is not None and r.queue_wait_s >= 0
+        assert r.ttft_s is not None and r.ttft_s > 0
+    # With one slot, later requests wait through earlier decode chunks:
+    # their queue wait dominates the first request's.
+    assert reqs[-1].queue_wait_s > reqs[0].queue_wait_s
+
+
+def test_reset_recurrent_batch_axis_guard():
+    """Regression: reset_recurrent silently assumed batch on axis 1 for
+    every state leaf; a layout with batch elsewhere must fail loudly (and
+    work when the axis is passed explicitly)."""
+    from repro.models.common import reset_recurrent
+
+    mask = jnp.asarray([True, False])
+    cache = {
+        "lengths": jnp.asarray([3, 4], jnp.int32),
+        "ssm": jnp.ones((3, 2, 4), jnp.float32),     # (L, b, ...) — fine
+        "conv": jnp.ones((2, 5, 7), jnp.float32),    # batch on axis 0!
+    }
+    with pytest.raises(ValueError, match="conv"):
+        reset_recurrent(cache, mask)
+    out = reset_recurrent(cache, mask, state_keys=("ssm", ("conv", 0)))
+    np.testing.assert_array_equal(np.asarray(out["ssm"][:, 0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["ssm"][:, 1]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out["conv"][0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["conv"][1]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool (DESIGN.md §5.2)
+# ---------------------------------------------------------------------------
+
+def test_paged_model_logits_bit_identical():
+    """Model-level: with a hand-built page table, paged prefill + decode
+    logits must equal the contiguous layout BIT-for-bit (same masked
+    online-softmax over an identically-shaped gathered view)."""
+    cfg = get_config("yi-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    seg = jnp.asarray([4, 6], jnp.int32)
+
+    cache_c = model.init_cache(params, batch=2, max_len=16)
+    lc, cache_c = model.prefill(params, cache_c, toks, seg_lens=seg)
+    nxt = jnp.argmax(lc[:, -1], -1).astype(jnp.int32)
+    lc2, _ = model.decode_step(
+        params, cache_c, nxt[:, None], seg_lens=jnp.asarray([1, 1], jnp.int32)
+    )
+
+    pmodel = build_model(_paged(cfg))
+    cache_p = pmodel.init_cache(params, batch=2, max_len=16)
+    # max_len=16, page_size=8 -> 2 logical pages per slot; map them to
+    # scattered physical pages to exercise the translation.
+    cache_p["pages"] = jnp.asarray([[3, 0], [1, 2]], jnp.int32)
+    lp, cache_p = pmodel.prefill(params, cache_p, toks, seg_lens=seg)
+    lp2, _ = pmodel.decode_step(
+        params, cache_p, nxt[:, None], seg_lens=jnp.asarray([1, 1], jnp.int32)
+    )
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lp))
+    np.testing.assert_array_equal(np.asarray(lc2), np.asarray(lp2))
+
+
+@pytest.mark.parametrize(
+    "arch", ["yi-9b", "zamba2-2.7b", "whisper-small", "llama-3.2-vision-90b"]
+)
+def test_paged_engine_bit_identical_to_contiguous(arch):
+    """Serve-level: the same mixed-length/staggered-budget workload through
+    a paged engine with a POOLED page budget (smaller than slots x max_len)
+    must emit exactly the contiguous engine's tokens, across every cache
+    family that has a KV cache."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vis"] = jax.random.normal(
+            jax.random.PRNGKey(3), (2, cfg.n_vis_tokens, cfg.d_model),
+            jnp.float32,
+        )
+    if cfg.family == "encdec":
+        extras["frames"] = jax.random.normal(
+            jax.random.PRNGKey(4), (2, cfg.enc_seq, cfg.d_model), jnp.float32
+        )
+
+    def requests():
+        rng = np.random.default_rng(1)
+        return [
+            Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                    max_new_tokens=m)
+            for n, m in ((4, 7), (8, 3), (5, 5), (3, 6))
+        ]
+
+    ref = requests()
+    ServeEngine(cfg, params, batch_slots=2, max_len=32, chunk_size=4,
+                extras=extras).run(ref)
+    got = requests()
+    # 5 pages x 8 tokens = 40 pooled positions < 2 slots x 32 = 64.
+    eng = ServeEngine(_paged(cfg), params, batch_slots=2, max_len=32,
+                      chunk_size=4, extras=extras, n_pages=5)
+    eng.run(got)
+    for a, b in zip(ref, got):
+        assert a.generated == b.generated, f"{arch}: paged != contiguous"
+    assert sorted(eng.free_pages) == list(range(5))   # all pages returned
+
+
+def test_paged_pool_oversubscription_mixed_lengths():
+    """The acceptance workload: a mixed long/short request set runs in a
+    page pool HALF the contiguous reservation (2x effective capacity) and
+    every request still matches its full-forward greedy reference."""
+    cfg = get_config("yi-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(3)
+    slots, max_len, page = 3, 32, 8
+    # Contiguous would reserve 3 x 32 = 96 positions; the pool holds 48.
+    n_pages = 6
+    assert n_pages * page * 2 == slots * max_len
+    spec = [(20, 12), (4, 5), (6, 3), (3, 6), (5, 4)]   # 1 long + shorts
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in spec
+    ]
+    eng = ServeEngine(_paged(cfg), params, batch_slots=slots, max_len=max_len,
+                      chunk_size=4, n_pages=n_pages)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.generated == _greedy_reference(
+            model, params, r.prompt, r.max_new_tokens
+        ), f"slot {r.slot} diverged under page-pool oversubscription"
+    assert sorted(eng.free_pages) == list(range(n_pages))
+
+
+def test_paged_admission_gates_on_free_pages():
+    """A pool that fits only one request at a time must serialize admission
+    (FIFO head-of-line) instead of admitting into a free slot without
+    pages — and still complete everything correctly."""
+    cfg = get_config("yi-9b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(5)
+    # Each request needs 2 pages (need 9..16 tokens); pool has 2 -> one
+    # in flight at a time even though 2 slots are free.
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+                max_new_tokens=6)
+        for _ in range(3)
+    ]
+    eng = ServeEngine(_paged(cfg), params, batch_slots=2, max_len=16,
+                      chunk_size=2, n_pages=2)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert eng.stats["admission_waves"] >= 3           # serialized
+    for r in reqs:
+        assert r.generated == _greedy_reference(model, params, r.prompt, 6)
+
+
+def test_paged_falls_back_for_kv_free_families():
+    """A paged config on a cache family with no KV (mamba2) must fall back
+    to contiguous bookkeeping — no phantom page pool gating admission —
+    and still serve correctly."""
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    rng = np.random.default_rng(6)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=5).astype(np.int32),
+                max_new_tokens=4)
+        for _ in range(3)
+    ]
+    # n_pages=1 would gate admission to one request at a time if the
+    # phantom pool were honored.
+    eng = ServeEngine(_paged(cfg), params, batch_slots=2, max_len=16,
+                      chunk_size=2, n_pages=1)
+    assert not eng.paged
+    assert eng.policy_report()["cache_layout"] == "contiguous"
+    eng.run(reqs)
+    for r in reqs:
+        assert r.generated == _greedy_reference(model, params, r.prompt, 4)
+
+
+def test_paged_policy_report_sees_pooled_bytes():
+    """Residency planning must see the pool's real footprint, not the
+    contiguous worst case."""
+    cfg = get_config("yi-9b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(6))
+    cont = ServeEngine(cfg, params, batch_slots=4, max_len=32)
+    pooled = ServeEngine(_paged(cfg), params, batch_slots=4, max_len=32,
+                         n_pages=8)   # 64 positions vs 128 contiguous
+    rc, rp = cont.policy_report(), pooled.policy_report()
+    assert rp["kv_bytes_per_layer"] * 2 == rc["kv_bytes_per_layer"]
+    assert rp["paged_kv"]["pool_positions"] == 64
+    assert rp["paged_kv"]["contiguous_positions"] == 128
 
 
 def test_kv_policy_decision():
