@@ -20,6 +20,9 @@ figure-specific metrics.
   (``benchmarks.serve_bench``)
 * ``serve_families`` — per-cache-family serve rows with paged-vs-
   contiguous bit-identity asserted where a KV cache exists
+* ``serve_spec`` — speculative decode on the repeat-heavy smoke workload:
+  acceptance rate, tokens per verify round, spec/non-spec throughput
+  ratio, spec-vs-plain bit-identity asserted (greedy + seeded sampling)
 
 so BENCH_*.json files can track the planning-pipeline and serving perf
 trajectories across PRs.  ``--analytic-only`` skips the measured (jit
@@ -124,8 +127,15 @@ def main(argv=None) -> None:
             _emit(paged_rows, rows)
             family_rows, family_summary = serve_bench.family_rows()
             _emit(family_rows, rows)
+            # Speculative decode on the repeat-heavy workload: asserts
+            # spec-vs-plain bit-identity (greedy + seeded sampling) and
+            # the acceptance floor, reports the throughput ratio.
+            spec_rows, spec_summary = serve_bench.spec_rows(
+                reps=max(1, args.reps)
+            )
+            _emit(spec_rows, rows)
             serve_summary = {**serve_summary, **paged_summary,
-                             **family_summary}
+                             **family_summary, **spec_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 

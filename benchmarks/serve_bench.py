@@ -20,10 +20,17 @@ Emitted metrics (also merged into ``benchmarks.run --json`` output):
                              cache families) with paged-vs-contiguous
                              bit-identity asserted where a KV cache exists,
                              plus paged/contiguous throughput ratio
+* ``serve_spec``           — speculative decode on the repeat-heavy smoke
+                             workload (``spec_rows``): acceptance rate,
+                             tokens per verify round, and spec/non-spec
+                             throughput ratio, with spec-vs-plain
+                             bit-identity asserted (greedy AND seeded
+                             temperature sampling)
 
 ``python -m benchmarks.serve_bench --identity-only`` runs only the
-paged-vs-contiguous bit-identity checks (the CI gate) and exits nonzero
-on any mismatch.
+bit-identity checks (the CI gate) — paged vs contiguous, speculative vs
+plain (greedy + seeded sampling), and the speculative acceptance-rate
+floor — and exits nonzero on any violation.
 """
 from __future__ import annotations
 
@@ -284,6 +291,177 @@ def paged_rows(chunk_size: int = CHUNK, reps: int = 3, warm: bool = True):
 
 
 # ---------------------------------------------------------------------------
+# Speculative decode on the repeat-heavy smoke workload (DESIGN.md §5.3)
+# ---------------------------------------------------------------------------
+
+# Same serving-scale dims as the paged leg (per-eval compute must dominate
+# dispatch overhead for the verify-width tradeoff to resemble serving
+# reality) with a small vocab so greedy streams reach their attractor
+# cycles inside the probe budget.
+SPEC_BENCH_DIMS = dict(PAGED_BENCH_DIMS, vocab=64)
+SPEC_K = 4             # drafts per verify round
+SPEC_NGRAM = 3
+SPEC_PROBES = 8        # candidate streams probed for repetitive tails
+SPEC_CUT = 60          # resume this deep inside each probed stream
+SPEC_NEW = 33          # tokens decoded per workload request
+SPEC_TOP = 3           # most-repetitive probes kept (cycled to N_REQUESTS)
+# CI floor for n-gram acceptance on this workload (measured 1.00; the
+# workload is fully deterministic, so a drop signals a proposer/verify
+# regression, not noise).
+SPEC_ACCEPT_FLOOR = 0.75
+
+
+def _ngram_oracle(hist: list, start: int, g: int, k: int) -> float:
+    """Simulated draft acceptance of ``hist[start:]`` given its prefix:
+    the host-side twin of `serve.draft.ngram_propose` + greedy verify,
+    used to rank probed streams by repeat-heaviness."""
+    acc = tot = 0
+    i = start
+    while i < len(hist):
+        suf = hist[i - g:i]
+        best = -1
+        for p in range(i - g):
+            if hist[p:p + g] == suf:
+                best = p
+        a = 0
+        for j in range(k):
+            q = best + g + j
+            d = hist[q] if best >= 0 and q < i else hist[i - 1]
+            if i + j < len(hist) and d == hist[i + j]:
+                a += 1
+            else:
+                break
+        acc += a
+        tot += k
+        i += a + 1
+    return acc / tot if tot else 0.0
+
+
+def _spec_workload(cfg, params):
+    """Build the repeat-heavy workload: probe greedy streams from seeded
+    prompts, rank their tails by simulated n-gram acceptance, and resume
+    the most repetitive ones SPEC_CUT tokens in.  By greedy determinism
+    the continuation of ``prompt + own-output-prefix`` is exactly the rest
+    of the probed stream, so the workload's acceptance profile is known —
+    the serving shape speculative decode exists for (long generations deep
+    inside repetitive spans).  Returns (request factory, probe engine)."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(SPEC_PROBES)]
+    probe = [Request(prompt=p, max_new_tokens=SPEC_CUT + SPEC_NEW)
+             for p in prompts]
+    eng = ServeEngine(cfg, params, batch_slots=SLOTS, max_len=PAGED_MAX_LEN,
+                      chunk_size=CHUNK)
+    eng.run(probe)
+    scored = sorted(
+        ((_ngram_oracle(list(p) + q.generated, len(p) + SPEC_CUT,
+                        SPEC_NGRAM, SPEC_K), p, q)
+         for p, q in zip(prompts, probe)),
+        key=lambda t: -t[0],
+    )
+    top = (scored[:SPEC_TOP] * (N_REQUESTS // SPEC_TOP)
+           + scored[:N_REQUESTS % SPEC_TOP])
+
+    def requests():
+        return [
+            Request(prompt=np.concatenate(
+                [p, np.asarray(q.generated[:SPEC_CUT], np.int32)]),
+                max_new_tokens=SPEC_NEW)
+            for _, p, q in top
+        ]
+
+    return requests, eng
+
+
+def spec_rows(reps: int = 3, identity_only: bool = False):
+    """Speculative vs plain decode on the repeat-heavy smoke workload.
+
+    Asserts bit-identity (greedy, and seeded temperature sampling — the
+    verify pass replays the exact (seed, token-index) sampler decision)
+    and the acceptance-rate floor; in full mode also times both paths
+    best-of-``reps`` and reports the throughput ratio."""
+    cfg = dataclasses.replace(
+        get_config(SERVE_ARCH, smoke=True), **SPEC_BENCH_DIMS
+    )
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    spec_cfg = dataclasses.replace(cfg, spec_k=SPEC_K, spec_ngram=SPEC_NGRAM)
+    requests, eng = _spec_workload(cfg, params)
+    seng = ServeEngine(spec_cfg, params, batch_slots=SLOTS,
+                       max_len=PAGED_MAX_LEN,
+                       chunk_size=2 * (SPEC_K + 1))
+
+    # -- identity + acceptance (always run; the CI gate) -------------------
+    base = requests()
+    eng.run(base)
+    got = requests()
+    base_stats = dict(seng.stats)
+    seng.run(got)
+    for a, b in zip(base, got):
+        assert a.generated == b.generated, (
+            "speculative != plain greedy decode on the smoke workload"
+        )
+    d = {k: seng.stats[k] - base_stats[k] for k in seng.stats}
+    acceptance = (d["draft_accepted"] / d["draft_proposed"]
+                  if d["draft_proposed"] else 0.0)
+    tokens_per_round = (d["decode_tokens"] / d["spec_rounds"]
+                        if d["spec_rounds"] else 0.0)
+    assert acceptance >= SPEC_ACCEPT_FLOOR, (
+        f"spec acceptance {acceptance:.2f} dropped below the recorded "
+        f"floor {SPEC_ACCEPT_FLOOR} on the repeat-heavy smoke workload"
+    )
+
+    # Sampling identity leg: seeded temperature streams must survive the
+    # draft/verify/rollback machinery token-for-token too.
+    tcfg = dataclasses.replace(cfg, sampling="temperature", temperature=0.8)
+    tspec = dataclasses.replace(tcfg, spec_k=SPEC_K, spec_ngram=SPEC_NGRAM)
+
+    def temp_run(c):
+        rs = requests()
+        for i, r in enumerate(rs):
+            r.seed = 1000 + i
+        ServeEngine(c, params, batch_slots=SLOTS, max_len=PAGED_MAX_LEN,
+                    chunk_size=2 * (SPEC_K + 1)).run(rs)
+        return [r.generated for r in rs]
+
+    assert temp_run(tcfg) == temp_run(tspec), (
+        "speculative != plain decode under seeded temperature sampling"
+    )
+
+    if identity_only:
+        print(f"spec: bit-identical (greedy + seeded sampling), "
+              f"acceptance {acceptance:.2f} >= floor {SPEC_ACCEPT_FLOOR}")
+        return [], {}
+
+    # -- timed: both engines warm, best-of reps ----------------------------
+    walls = {}
+    for name, e in (("plain", eng), ("spec", seng)):
+        best = None
+        for _ in range(max(1, reps)):
+            rs = requests()
+            t0 = time.perf_counter()
+            e.run(rs)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        walls[name] = (sum(len(r.generated) for r in rs), best)
+    tok_s = {k: n / w for k, (n, w) in walls.items()}
+    ratio = tok_s["spec"] / tok_s["plain"]
+    row = {
+        "name": "serve/spec_repeat_heavy",
+        "us_per_call": 1e6 / tok_s["spec"],
+        "tok_s": tok_s["spec"],
+        "plain_tok_s": tok_s["plain"],
+        "spec_over_plain": ratio,
+        "acceptance_rate": acceptance,
+        "tokens_per_round": tokens_per_round,
+        "spec_k": SPEC_K,
+        "spec_ngram": SPEC_NGRAM,
+        "bit_identical": True,
+    }
+    summary = {"serve_spec": {k: v for k, v in row.items() if k != "name"}}
+    return [row], summary
+
+
+# ---------------------------------------------------------------------------
 # Cache-family breadth + paged-vs-contiguous bit-identity
 # ---------------------------------------------------------------------------
 
@@ -391,17 +569,23 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--identity-only", action="store_true",
-                    help="run only the paged-vs-contiguous bit-identity "
-                         "checks (CI gate); nonzero exit on mismatch")
+                    help="run only the bit-identity checks — paged vs "
+                         "contiguous, speculative vs plain (greedy + "
+                         "seeded sampling), and the spec acceptance floor "
+                         "(CI gate); nonzero exit on any violation")
     args = ap.parse_args()
     if args.identity_only:
         family_rows(identity_only=True)
         paged_rows(reps=1, warm=False)
+        spec_rows(identity_only=True)
         print("serve bit-identity: PASS")
     else:
         rows, summary = serve_rows()
         prows, psummary = paged_rows()
         frows, fsummary = family_rows()
-        for r in rows + prows + frows:
+        srows, ssummary = spec_rows()
+        for r in rows + prows + frows + srows:
             print(r)
-        print(json.dumps({**summary, **psummary, **fsummary}, indent=1))
+        print(json.dumps(
+            {**summary, **psummary, **fsummary, **ssummary}, indent=1
+        ))

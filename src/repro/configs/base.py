@@ -47,6 +47,18 @@ class ModelConfig:
     # shared across slots via a per-slot page table (DESIGN.md §5.2).
     cache_layout: str = "contiguous"   # "contiguous" | "paged"
     kv_page_size: int = 16             # tokens per page ("paged" only)
+    # Speculative decode (serving, DESIGN.md §5.3): an on-device n-gram
+    # proposer drafts spec_k tokens per slot; one multi-token verify
+    # dispatch accepts a ragged per-slot prefix and rolls the rest back.
+    spec_k: int = 0                    # draft tokens per verify (0 = off)
+    spec_ngram: int = 3                # suffix length for the proposer
+    # Serving-time sampling (serve.sampling.Sampler); non-greedy modes
+    # thread per-request PRNG keys folded from (seed, token index) so
+    # outputs are independent of slot assignment order.
+    sampling: str = "greedy"           # greedy | temperature | top_k | top_p
+    temperature: float = 1.0
+    top_k: int = 0                     # "top_k" mode: sample from k largest
+    top_p: float = 1.0                 # "top_p" mode: smallest mass >= top_p
     # Numerics / sharding
     dtype: str = "bfloat16"
     vocab_pad_multiple: int = 2048   # pad vocab so `model` axis (16) divides it

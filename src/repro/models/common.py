@@ -694,6 +694,12 @@ class ModelApply:
     ``seg_lens[b] == 0`` leaves slot b's cache state untouched — how the
     serve engine parks finished slots inside a decode chunk.
 
+    ``prefill(..., all_logits=True)`` returns logits for every position of
+    the block ((b, s, v) instead of the last-valid (b, 1, v)) — the
+    speculative verify path scores all draft positions in one dispatch
+    (DESIGN.md §5.3).  Rows at or beyond ``seg_lens[b]`` are garbage by
+    contract, exactly like ``last_valid_slice`` on a parked slot.
+
     ``reset_slots(cache, mask)`` clears per-slot recurrent state (cursor,
     SSM/conv state) for slots where mask is True, so a freed slot can be
     re-admitted mid-stream without a fresh cache allocation."""

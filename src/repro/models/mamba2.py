@@ -246,7 +246,8 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
     }
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None,
+            all_logits=False):
     b, s = tokens.shape
     x = cm.embed(params["embed"], tokens)
 
@@ -262,7 +263,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
         body, x, (params["layers"], cache["ssm"], cache["conv"])
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
+    out = x if all_logits else cm.last_valid_slice(x, seg_lens)
+    logits = cm.unembed(params["embed"], out, cfg)
     return logits, {
         "ssm": new_ssm, "conv": new_conv,
         "lengths": cache["lengths"] + (s if seg_lens is None else seg_lens),

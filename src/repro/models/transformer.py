@@ -272,7 +272,8 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
     return with_pages({"layers": kv(cfg.n_layers)})
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig, vis=None, seg_lens=None):
+def prefill(params, cache, tokens, cfg: ModelConfig, vis=None, seg_lens=None,
+            all_logits=False):
     b, s = tokens.shape
     x = cm.embed(params["embed"], tokens)
     positions = cache["lengths"][:, None] + jnp.arange(s)[None, :]
@@ -283,7 +284,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, vis=None, seg_lens=None):
     if cfg.cross_attn_every:
         new_cache["vis"] = cache["vis"]
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
+    out = x if all_logits else cm.last_valid_slice(x, seg_lens)
+    logits = cm.unembed(params["embed"], out, cfg)
     return logits, new_cache
 
 

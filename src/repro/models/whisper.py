@@ -161,7 +161,8 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
     return cache
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None,
+            all_logits=False):
     b, s = tokens.shape
     lengths = cache["lengths"]
     pages = cache.get("pages")
@@ -187,7 +188,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
         body, x, (params["dec_layers"], cache["self"], cache["cross"])
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
+    out = x if all_logits else cm.last_valid_slice(x, seg_lens)
+    logits = cm.unembed(params["embed"], out, cfg)
     new_cache = {
         "self": new_self, "cross": cache["cross"],
         "lengths": lengths + (s if seg_lens is None else seg_lens),

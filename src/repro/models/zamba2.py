@@ -120,7 +120,8 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis=None,
     return cache
 
 
-def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
+def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None,
+            all_logits=False):
     b, s = tokens.shape
     k = cfg.shared_attn_every
     g = cfg.n_layers // k
@@ -159,7 +160,8 @@ def prefill(params, cache, tokens, cfg: ModelConfig, seg_lens=None):
          {"k": cache["kv"]["k"], "v": cache["kv"]["v"]}),
     )
     x = cm.apply_norm(params["ln_f"], x, cfg)
-    logits = cm.unembed(params["embed"], cm.last_valid_slice(x, seg_lens), cfg)
+    out = x if all_logits else cm.last_valid_slice(x, seg_lens)
+    logits = cm.unembed(params["embed"], out, cfg)
     new_cache = {
         "ssm": nssm.reshape(cfg.n_layers, *nssm.shape[2:]),
         "conv": nconv.reshape(cfg.n_layers, *nconv.shape[2:]),

@@ -1,0 +1,53 @@
+"""On-device n-gram draft proposer for speculative decode (DESIGN.md §5.3).
+
+Prompt-lookup drafting: each slot's draft is the continuation of the most
+recent *earlier* occurrence of its current ``spec_ngram``-token suffix in
+that slot's own history (prompt + emitted tokens).  No draft model, no
+extra weights, no host sync — the proposer is a few gathers/compares over
+the (slots, max_len + 1) history buffer the engine already maintains, so it
+runs inside the jitted verify dispatch.
+
+A wrong draft costs nothing but acceptance (the verify pass rolls it back);
+when no earlier occurrence exists the proposer falls back to repeating the
+slot's last token, which keeps the verify dispatch shape static.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ngram_propose(hist: jnp.ndarray, hist_len: jnp.ndarray,
+                  ngram: int, k: int) -> jnp.ndarray:
+    """Draft ``k`` tokens per slot by suffix match over each slot's history.
+
+    ``hist``: (b, H) int32 token history (prompt + emitted, including the
+    not-yet-consumed current token at ``hist_len - 1``); ``hist_len``: (b,)
+    int32 valid prefix lengths.  Returns (b, k) int32 drafts.
+
+    Slot b's suffix is its last ``ngram`` tokens.  A candidate start p
+    matches iff ``hist[b, p:p+ngram]`` equals the suffix and the window lies
+    strictly before the suffix's own occurrence (``p < hist_len - ngram``).
+    The draft is the ``k`` tokens following the LAST match (most recent
+    context wins); positions past the valid prefix — and slots with no
+    match or with ``hist_len < ngram`` — fall back to the last token."""
+    b, H = hist.shape
+    idx = jnp.arange(H)[None, :]                              # (1, H)
+    # Suffix tokens: hist[b, hist_len - ngram + i]; clipped gathers on
+    # short histories read garbage that the validity mask below discards.
+    suf_pos = hist_len[:, None] - ngram + jnp.arange(ngram)[None, :]
+    suffix = jnp.take_along_axis(hist, jnp.clip(suf_pos, 0, H - 1), axis=1)
+    # match[b, p] = AND_i hist[b, p+i] == suffix[b, i], via ngram static
+    # shifts of a -1-padded history (token ids are >= 0, so the pad never
+    # spuriously matches).
+    padded = jnp.pad(hist, ((0, 0), (0, ngram)), constant_values=-1)
+    match = idx < (hist_len[:, None] - ngram)                 # p strictly earlier
+    for i in range(ngram):
+        match = match & (padded[:, i:i + H] == suffix[:, i:i + 1])
+    p_star = jnp.max(jnp.where(match, idx, -1), axis=1)       # (b,) last match
+    last = jnp.take_along_axis(
+        hist, jnp.clip(hist_len - 1, 0, H - 1)[:, None], axis=1
+    )                                                          # (b, 1) fallback
+    dpos = p_star[:, None] + ngram + jnp.arange(k)[None, :]    # (b, k)
+    ok = (p_star[:, None] >= 0) & (dpos < hist_len[:, None])
+    cont = jnp.take_along_axis(hist, jnp.clip(dpos, 0, H - 1), axis=1)
+    return jnp.where(ok, cont, last).astype(jnp.int32)

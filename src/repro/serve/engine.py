@@ -13,7 +13,7 @@ The serving loop itself is built to run at hardware speed (the inference
 loop, not the policy search, is the artifact that must be fast):
 
 * **Chunked on-device decode** — one `lax.scan` dispatch decodes
-  ``chunk_size`` tokens for every slot with on-device greedy sampling and
+  ``chunk_size`` tokens for every slot with on-device sampling and
   per-slot done flags; the host syncs once per *chunk* (to read the
   emitted tokens), not once per token.
 * **Ragged slots** — the cache carries a per-slot ``lengths`` cursor
@@ -26,10 +26,23 @@ loop, not the policy search, is the artifact that must be fast):
   are donated to each dispatch, so KV updates are in-place on device.
 * **Paged KV pool** (``cfg.cache_layout == "paged"``, DESIGN.md §5.2) —
   K/V capacity is pooled into fixed-size pages shared across slots; a
-  host-side free-list assigns each admitted request exactly the pages its
-  worst case needs and admission gates on free pages, so a pool smaller
-  than ``slots x max_len`` serves mixed long/short traffic while staying
-  bit-identical to the contiguous ring.
+  host-side free-list (`PageAllocator`) assigns each admitted request
+  exactly the pages its worst case needs and admission gates on free
+  pages, so a pool smaller than ``slots x max_len`` serves mixed
+  long/short traffic while staying bit-identical to the contiguous ring.
+* **Speculative decode** (``cfg.spec_k > 0``, DESIGN.md §5.3) — an
+  on-device n-gram proposer (`serve.draft`) drafts ``spec_k`` tokens per
+  slot from the slot's own history; ONE multi-token verify dispatch
+  scores every draft position via the model's ragged ``prefill`` path,
+  accepts each slot's matching prefix (1..spec_k+1 tokens per round) and
+  rolls the rejected suffix back — a per-slot cursor rewind for KV
+  families, a seg-gated replay for recurrent state (mamba2/zamba2).
+  Output-identical to the non-speculative path under every sampling mode
+  because acceptance replays the exact `(seed, token-index)`-keyed
+  sampler decision the sequential loop would have made.
+* **Sampling** (`serve.sampling.Sampler`) — greedy / temperature / top-k
+  / top-p on device inside the chunk scan; per-request seeds fold into
+  per-token keys so streams are independent of slot assignment order.
 """
 from __future__ import annotations
 
@@ -48,12 +61,21 @@ from repro.core import CachePolicyEngine, make_engine
 from repro.core.characterize import attention_op
 from repro.models import build_model
 from repro.models.common import paged_kv_spec
+from repro.serve.draft import ngram_propose
+from repro.serve.sampling import (  # noqa: F401  (greedy_sample re-export)
+    Sampler,
+    greedy_sample,
+    sample_keys,
+)
 
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray            # (len,) int32
     max_new_tokens: int = 16
+    seed: int | None = None       # per-request sampling seed (None -> 0):
+                                  # streams depend on (seed, token index)
+                                  # only, never on slot assignment order
     generated: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
@@ -61,10 +83,6 @@ class Request:
     queue_wait_s: float | None = None  # submit -> admission (queueing only)
     submit_t: float | None = None
     admit_t: float | None = None
-
-
-def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
-    return jnp.argmax(logits[:, -1], axis=-1)
 
 
 def _pad_bucket(n: int, cap: int) -> int:
@@ -76,13 +94,64 @@ def _pad_bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
+class PageAllocator:
+    """Host-side LIFO free-list over a fixed page pool (DESIGN.md §5.2).
+
+    Invariants (property-tested in ``tests/test_alloc_property.py``):
+
+    * a page is never handed out twice without an intervening ``free``,
+    * ``alloc`` never over-commits — it returns None instead of dipping
+      below zero free pages (admission gating),
+    * held + free is a partition of the pool at all times (no leaks).
+    """
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 0
+        self.n_pages = n_pages
+        self._free = list(range(n_pages))
+        self._held: set[int] = set()
+
+    @property
+    def free_pages(self) -> list[int]:
+        return list(self._free)
+
+    @property
+    def held_pages(self) -> set[int]:
+        return set(self._held)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages (LIFO), or None if the pool can't cover them."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        assert not self._held.intersection(ids), "double-allocated page"
+        self._held.update(ids)
+        return ids
+
+    def free(self, ids) -> None:
+        ids = list(ids)
+        assert len(ids) == len(set(ids)), (
+            f"duplicate page ids in free(): {ids}"
+        )
+        bad = [i for i in ids if i not in self._held]
+        assert not bad, f"freeing pages not held: {bad}"
+        self._held.difference_update(ids)
+        self._free.extend(ids)
+
+
 class ServeEngine:
     """Continuous-batching engine over a fixed pool of request slots.
 
     ``run(requests)`` (or ``submit`` + ``drain``) pushes requests through a
     queue: free slots are prefilled (ragged, right-padded), live slots
-    decode in device-resident chunks, finished slots free at chunk
-    boundaries and are immediately re-admitted from the queue.
+    decode in device-resident chunks — plain chunked decode, or draft/
+    verify/rollback rounds when ``cfg.spec_k > 0`` — finished slots free at
+    chunk boundaries and are immediately re-admitted from the queue.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
@@ -96,8 +165,16 @@ class ServeEngine:
         self.max_len = max_len
         self.chunk_size = max(1, chunk_size)
         self.extras = extras or {}
+        self.sampler = Sampler.from_config(cfg)
+        # Speculative decode (DESIGN.md §5.3): k drafts verified per round,
+        # emitting 1..k+1 tokens; a chunk packs enough rounds to target
+        # ~chunk_size tokens per host sync at full acceptance.
+        self.spec = cfg.spec_k > 0
+        self.spec_k = cfg.spec_k
+        self.spec_ngram = cfg.spec_ngram
+        self.spec_rounds = max(1, self.chunk_size // (cfg.spec_k + 1))
         # Paged KV layout (DESIGN.md §5.2): K/V capacity is pooled into
-        # fixed-size pages shared across slots; this host-side free-list
+        # fixed-size pages shared across slots; the host-side free-list
         # assigns each admitted request exactly the pages its worst case
         # needs (prompt + budget), so a pool smaller than slots x max_len
         # serves mixed long/short traffic.  ``n_pages`` None sizes the pool
@@ -115,7 +192,7 @@ class ServeEngine:
             self.pages_per_slot, self.n_pages = paged_kv_spec(
                 batch_slots, max_len, psz, n_pages
             )
-            self.free_pages = list(range(self.n_pages))
+            self.allocator = PageAllocator(self.n_pages)
             self.page_table = np.full(
                 (batch_slots, self.pages_per_slot), -1, np.int32
             )
@@ -147,13 +224,31 @@ class ServeEngine:
             self.kv_residency = self.policy.kv_policy(
                 self._kv_bytes_per_layer()
             )
+        # Recurrent state (SSM/conv) has no per-position validity mask, so
+        # the speculative rollback cannot be a cursor rewind: those
+        # families re-run the verify block from the pre-verify cache with
+        # ``seg_lens = accepted`` (the dt/conv gating makes the replay
+        # consume exactly the accepted prefix).  KV-only families rewind.
+        self._spec_replay = "ssm" in self.cache or "conv" in self.cache
         self._reset_slots = self.model.reset_slots
-        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1, 4, 5))
-        self._decode_chunk = jax.jit(self._chunk_fn, donate_argnums=(1, 2, 3))
-        # Device-resident per-slot loop state: last sampled token and the
-        # remaining token budget (0 == slot parked/free).
+        self._prefill = jax.jit(
+            self._prefill_fn, donate_argnums=(1, 4, 5, 7, 8, 9, 11)
+        )
+        self._decode_chunk = jax.jit(
+            self._spec_chunk_fn if self.spec else self._chunk_fn,
+            donate_argnums=(1, 2, 3, 4, 5, 6),
+        )
+        # Device-resident per-slot loop state: last sampled token, remaining
+        # token budget (0 == slot parked/free), per-request token index and
+        # sampling seed, and the token history the n-gram proposer mines
+        # (prompt + emitted, including the not-yet-consumed current token —
+        # at most max_len + 1 entries since prompt + budget <= max_len + 1).
         self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
         self.remaining = jnp.zeros((batch_slots,), jnp.int32)
+        self.tok_idx = jnp.zeros((batch_slots,), jnp.int32)
+        self.seeds = jnp.zeros((batch_slots,), jnp.int32)
+        self.hist = jnp.zeros((batch_slots, max_len + 1), jnp.int32)
+        self.hist_len = jnp.zeros((batch_slots,), jnp.int32)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = {
@@ -163,9 +258,17 @@ class ServeEngine:
             "prefill_tokens": 0,      # first tokens emitted by prefill
             "chunks": 0,
             "admission_waves": 0,
+            "spec_rounds": 0,         # active draft/verify rounds
+            "draft_proposed": 0,      # spec_k per active round
+            "draft_accepted": 0,      # matching draft prefix per round
         }
 
     # -- policy ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> list[int]:
+        """Free-list view (paged only) — delegated to the PageAllocator."""
+        return self.allocator.free_pages
 
     def _kv_bytes_per_layer(self) -> int:
         """Real per-layer KV footprint, so residency planning sees the bytes
@@ -194,13 +297,21 @@ class ServeEngine:
             # Effective layout: "contiguous" when a paged request met a
             # cache family with no KV to page (see __init__ fallback).
             "cache_layout": "paged" if self.paged else "contiguous",
+            "sampling": self.sampler.mode,
             "plan_cache": self.policy.plan_stats(),
         }
+        if self.spec:
+            report["speculative"] = {
+                "spec_k": self.spec_k,
+                "spec_ngram": self.spec_ngram,
+                "rounds_per_chunk": self.spec_rounds,
+                "rollback": "replay" if self._spec_replay else "rewind",
+            }
         if self.paged:
             report["paged_kv"] = {
                 "n_pages": self.n_pages,
                 "page_size": self.page_size,
-                "free_pages": len(self.free_pages),
+                "free_pages": self.allocator.free_count(),
                 "pool_positions": self.n_pages * self.page_size,
                 "contiguous_positions": self.slots * self.max_len,
             }
@@ -215,7 +326,7 @@ class ServeEngine:
         return report
 
     def serve_stats(self) -> dict:
-        """Host-sync accounting for the decode loop."""
+        """Host-sync + speculative-acceptance accounting for the loop."""
         out = dict(self.stats)
         total = out["decode_tokens"] + out["prefill_tokens"]
         out["host_syncs_per_token"] = (
@@ -225,46 +336,191 @@ class ServeEngine:
             out["decode_syncs"] / out["decode_tokens"]
             if out["decode_tokens"] else 0.0
         )
+        out["spec_acceptance_rate"] = (
+            out["draft_accepted"] / out["draft_proposed"]
+            if out["draft_proposed"] else 0.0
+        )
+        out["spec_tokens_per_round"] = (
+            out["decode_tokens"] / out["spec_rounds"]
+            if out["spec_rounds"] else 0.0
+        )
         return out
 
     # -- device-side step functions (jitted once) --------------------------
 
+    def _sample(self, logits, seeds, tok_idx):
+        """Sampler dispatch: per-slot keys folded from (request seed, token
+        index) — a pure function of the request, so streams are independent
+        of slot assignment and batch composition."""
+        keys = (sample_keys(seeds, tok_idx)
+                if self.sampler.needs_keys else None)
+        return self.sampler(logits, keys).astype(jnp.int32)
+
+    def _hist_append(self, hist, positions, tokens):
+        """Scatter ``tokens`` into per-slot history at ``positions``;
+        out-of-range positions (parked slots pass H) drop."""
+        b = hist.shape[0]
+        return hist.at[jnp.arange(b)[:, None] if positions.ndim == 2
+                       else jnp.arange(b), positions].set(tokens, mode="drop")
+
     def _prefill_fn(self, params, cache, tokens, seg_lens, cur_tok,
-                    remaining, new_remaining):
+                    remaining, new_remaining, tok_idx, hist, hist_len,
+                    new_seeds, seeds):
         """Ragged admission prefill: reset re-admitted slots, prefill their
         prompts (seg_lens == 0 parks continuing slots), sample each admitted
-        slot's first token on device."""
+        slot's first token on device, and (re)seed the slot's history /
+        token-index / seed state."""
+        b, pad = tokens.shape
+        H = hist.shape[1]
         admitted = seg_lens > 0
         if self._reset_slots is not None:
             cache = self._reset_slots(cache, admitted)
         logits, cache = self.model.prefill(
             params, cache, tokens, seg_lens=seg_lens
         )
-        nxt = greedy_sample(logits).astype(jnp.int32)
+        # The first token of a request is token index 0 of its stream.
+        nxt = self._sample(logits, new_seeds, jnp.zeros((b,), jnp.int32))
         cur_tok = jnp.where(admitted, nxt, cur_tok)
         remaining = jnp.where(admitted, new_remaining, remaining)
-        return cache, cur_tok, remaining, nxt
+        seeds = jnp.where(admitted, new_seeds, seeds)
+        tok_idx = jnp.where(admitted, 1, tok_idx)
+        # History: prompt rows land at 0..seg-1, the first token at seg;
+        # parked slots redirect to H and drop.
+        pos = jnp.broadcast_to(jnp.arange(pad)[None, :], (b, pad))
+        pos = jnp.where(
+            admitted[:, None] & (pos < seg_lens[:, None]), pos, H
+        )
+        hist = self._hist_append(hist, pos, tokens)
+        hist = self._hist_append(
+            hist, jnp.where(admitted, seg_lens, H), nxt
+        )
+        hist_len = jnp.where(admitted, seg_lens + 1, hist_len)
+        return cache, cur_tok, remaining, tok_idx, hist, hist_len, seeds, nxt
 
-    def _chunk_fn(self, params, cache, cur_tok, remaining):
+    def _chunk_fn(self, params, cache, cur_tok, remaining, tok_idx, hist,
+                  hist_len, seeds):
         """Decode ``chunk_size`` tokens per slot in one dispatch: scan of
-        single-token steps with on-device greedy sampling; slots whose
-        budget hits zero park (seg_lens == 0 -> state untouched)."""
+        single-token steps with on-device sampling; slots whose budget hits
+        zero park (seg_lens == 0 -> state untouched).
+
+        Only the speculative path consumes the n-gram history, so this
+        (non-spec) chunk passes ``hist``/``hist_len`` through untouched —
+        no per-token scatter or carry traffic on the hot loop."""
+
         def step(carry, _):
-            cache, tok, rem = carry
+            cache, tok, rem, tidx = carry
             active = rem > 0
             logits, cache = self.model.decode_step(
                 params, cache, tok[:, None],
                 seg_lens=active.astype(jnp.int32),
             )
-            nxt = greedy_sample(logits).astype(jnp.int32)
+            nxt = self._sample(logits, seeds, tidx)
             tok = jnp.where(active, nxt, tok)
+            tidx = jnp.where(active, tidx + 1, tidx)
             rem = jnp.where(active, rem - 1, rem)
-            return (cache, tok, rem), (tok, active)
+            return (cache, tok, rem, tidx), (tok, active)
 
-        (cache, tok, rem), (toks, actives) = jax.lax.scan(
-            step, (cache, cur_tok, remaining), None, length=self.chunk_size
+        (cache, tok, rem, tidx), (toks, actives) = jax.lax.scan(
+            step, (cache, cur_tok, remaining, tok_idx),
+            None, length=self.chunk_size,
         )
-        return cache, tok, rem, toks, actives
+        return cache, tok, rem, tidx, hist, hist_len, toks, actives
+
+    def _spec_chunk_fn(self, params, cache, cur_tok, remaining, tok_idx,
+                       hist, hist_len, seeds):
+        """``spec_rounds`` draft/verify/rollback rounds in one dispatch
+        (DESIGN.md §5.3).  Each round, per active slot:
+
+        1. *Draft*: ``ngram_propose`` mines the slot's history for spec_k
+           draft tokens.
+        2. *Verify*: ONE ragged multi-token ``prefill`` over
+           ``[cur_tok, d_1..d_k]`` returns logits for every position;
+           position j's sampler decision (keyed by token index
+           ``tok_idx + j``) is exactly the token the sequential loop would
+           emit there, so the target tokens double as the emissions.
+        3. *Accept*: the emitted count is ``min(matching prefix + 1,
+           remaining)`` — always >= 1 (the sampler's own token at the first
+           mismatch), at most spec_k + 1 (all drafts + the bonus token).
+        4. *Rollback*: KV families keep the verify-pass cache and rewind
+           ``lengths`` to base + accepted (rejected KV is stale-but-masked,
+           overwritten as the cursor advances — the ring invariant);
+           recurrent families replay the block from the pre-verify cache
+           with ``seg_lens = accepted`` (dt/conv gating consumes exactly
+           the accepted prefix).
+        """
+        b = self.slots
+        k, k1 = self.spec_k, self.spec_k + 1
+        H = hist.shape[1]
+
+        def round_fn(carry, _):
+            cache, tok, rem, tidx, hist, hlen = carry
+            active = rem > 0
+            base_len = cache["lengths"]
+            drafts = ngram_propose(hist, hlen, self.spec_ngram, k)
+            vt = jnp.concatenate([tok[:, None], drafts], axis=1)  # (b, k1)
+            seg_v = jnp.where(active, k1, 0).astype(jnp.int32)
+            logits_all, cache_v = self.model.prefill(
+                params, cache, vt, seg_lens=seg_v, all_logits=True
+            )
+            # Target token at position j = sampler decision for token index
+            # tidx + j: identical to what sequential decode would sample.
+            if self.sampler.needs_keys:
+                keys = sample_keys(
+                    jnp.broadcast_to(seeds[:, None], (b, k1)).reshape(-1),
+                    (tidx[:, None] + jnp.arange(k1)[None, :]).reshape(-1),
+                )
+            else:
+                keys = None
+            targets = self.sampler(
+                logits_all.reshape(b * k1, -1), keys
+            ).astype(jnp.int32).reshape(b, k1)
+            match = (drafts == targets[:, :k]).astype(jnp.int32)
+            accepted = jnp.sum(jnp.cumprod(match, axis=1), axis=1)   # (b,)
+            m = jnp.where(active, jnp.minimum(accepted + 1, rem), 0)
+            # Acceptance accounting reflects USABLE drafts only: a slot
+            # with rem remaining tokens can consume at most rem - 1 drafts
+            # this round, so matches past the budget clip neither count as
+            # accepted nor as proposed (they produced no tokens).
+            usable = jnp.where(
+                active, jnp.minimum(jnp.int32(k), rem - 1), 0
+            )
+            acc_used = jnp.maximum(m - 1, 0)
+            if self._spec_replay:
+                # Recurrent rollback: consume exactly the accepted prefix
+                # from the pre-verify cache (discard the polluted verify
+                # state).  Also rewrites the accepted KV — same bytes.
+                _, cache = self.model.prefill(
+                    params, cache, vt, seg_lens=m
+                )
+            else:
+                # KV rollback: rejected positions are beyond the rewound
+                # cursor — stale-but-masked, overwritten as it advances.
+                cache = dict(cache_v)
+                cache["lengths"] = base_len + m
+            emit = jnp.arange(k1)[None, :] < m[:, None]              # (b, k1)
+            hist = self._hist_append(
+                hist,
+                jnp.where(emit, hlen[:, None] + jnp.arange(k1)[None, :], H),
+                targets,
+            )
+            last = jnp.take_along_axis(
+                targets, jnp.clip(m - 1, 0, k)[:, None], axis=1
+            )[:, 0]
+            tok = jnp.where(active, last, tok)
+            hlen = hlen + m
+            tidx = tidx + m
+            rem = rem - m
+            return (cache, tok, rem, tidx, hist, hlen), (
+                targets, emit, acc_used, usable, active
+            )
+
+        carry = (cache, cur_tok, remaining, tok_idx, hist, hist_len)
+        (cache, tok, rem, tidx, hist, hlen), ys = jax.lax.scan(
+            round_fn, carry, None, length=self.spec_rounds
+        )
+        toks, emits, accepts, proposed, actives = ys
+        return (cache, tok, rem, tidx, hist, hlen,
+                toks, emits, accepts, proposed, actives)
 
     # -- host-side scheduling ----------------------------------------------
 
@@ -317,7 +573,7 @@ class ServeEngine:
             # refreshed lazily at the next admission wave; until then the
             # stale row is harmless — the parked slot neither writes KV
             # (seg_lens == 0 drops the scatter) nor has its output read.
-            self.free_pages.extend(self._slot_pages[r.slot])
+            self.allocator.free(self._slot_pages[r.slot])
             self._slot_pages[r.slot] = []
             self.page_table[r.slot] = -1
 
@@ -332,14 +588,13 @@ class ServeEngine:
                 # Admission gates on free pages (FIFO head-of-line: a
                 # request that doesn't fit waits for pages to free rather
                 # than being overtaken).
-                need = self._pages_needed(self.queue[0])
-                if need > len(self.free_pages):
+                ids = self.allocator.alloc(self._pages_needed(self.queue[0]))
+                if ids is None:
                     break
                 r = self.queue.popleft()
-                ids = [self.free_pages.pop() for _ in range(need)]
                 self._slot_pages[slot] = ids
                 self.page_table[slot] = -1
-                self.page_table[slot, :need] = ids
+                self.page_table[slot, :len(ids)] = ids
             else:
                 r = self.queue.popleft()
             r.admit_t = now
@@ -352,11 +607,16 @@ class ServeEngine:
         toks = np.zeros((self.slots, pad), np.int32)
         seg = np.zeros((self.slots,), np.int32)
         new_rem = np.zeros((self.slots,), np.int32)
+        new_seeds = np.zeros((self.slots,), np.int32)
         for slot, r in wave:
             n = len(r.prompt)
             toks[slot, :n] = r.prompt          # right-pad; scatter drops tail
             seg[slot] = n
             new_rem[slot] = r.max_new_tokens - 1
+            # Fold arbitrary Python ints (64-bit hashes, negatives) into
+            # int32 range: still a pure function of the request's seed, so
+            # determinism and order-independence are preserved.
+            new_seeds[slot] = (0 if r.seed is None else r.seed) % (2 ** 31)
             r.slot = slot
             self.slot_req[slot] = r
         if self.paged:
@@ -367,9 +627,12 @@ class ServeEngine:
         # Admission consults the policy engine: KV residency for the current
         # occupancy and the (PlanCache-memoized) decode-attention plan.
         self.decode_plan = self._plan_decode()
-        self.cache, self.cur_tok, self.remaining, nxt = self._prefill(
+        (self.cache, self.cur_tok, self.remaining, self.tok_idx, self.hist,
+         self.hist_len, self.seeds, nxt) = self._prefill(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(seg),
             self.cur_tok, self.remaining, jnp.asarray(new_rem),
+            self.tok_idx, self.hist, self.hist_len, jnp.asarray(new_seeds),
+            self.seeds,
         )
         first = np.asarray(nxt)                # host sync: 1 per wave
         self.stats["host_syncs"] += 1
@@ -386,10 +649,10 @@ class ServeEngine:
                 self._finish(r)
 
     def _run_chunk(self) -> None:
-        self.cache, self.cur_tok, self.remaining, toks, actives = (
-            self._decode_chunk(
-                self.params, self.cache, self.cur_tok, self.remaining
-            )
+        (self.cache, self.cur_tok, self.remaining, self.tok_idx, self.hist,
+         self.hist_len, toks, actives) = self._decode_chunk(
+            self.params, self.cache, self.cur_tok, self.remaining,
+            self.tok_idx, self.hist, self.hist_len, self.seeds,
         )
         t_np, a_np = jax.device_get((toks, actives))   # host sync: 1 per chunk
         self.stats["host_syncs"] += 1
@@ -403,12 +666,41 @@ class ServeEngine:
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
 
+    def _run_spec_chunk(self) -> None:
+        (self.cache, self.cur_tok, self.remaining, self.tok_idx, self.hist,
+         self.hist_len, toks, emits, accepts, proposed,
+         actives) = self._decode_chunk(
+            self.params, self.cache, self.cur_tok, self.remaining,
+            self.tok_idx, self.hist, self.hist_len, self.seeds,
+        )
+        # toks/emits: (rounds, b, k+1); accepts/proposed/actives: (rounds, b).
+        t_np, e_np, acc_np, prop_np, act_np = jax.device_get(
+            (toks, emits, accepts, proposed, actives)
+        )                                              # host sync: 1 per chunk
+        self.stats["host_syncs"] += 1
+        self.stats["decode_syncs"] += 1
+        self.stats["chunks"] += 1
+        for slot, r in self._live():
+            for j in range(t_np.shape[0]):
+                if not act_np[j, slot]:
+                    continue
+                row = e_np[j, slot]
+                for t in t_np[j, slot][row]:
+                    r.generated.append(int(t))
+                self.stats["decode_tokens"] += int(row.sum())
+                self.stats["spec_rounds"] += 1
+                self.stats["draft_proposed"] += int(prop_np[j, slot])
+                self.stats["draft_accepted"] += int(acc_np[j, slot])
+            if len(r.generated) >= r.max_new_tokens:
+                self._finish(r)
+
     def drain(self) -> None:
         """Run admission + chunked decode until queue and slots are empty."""
+        run = self._run_spec_chunk if self.spec else self._run_chunk
         while self.queue or self.slot_req.count(None) < self.slots:
             self._admit_wave()
             if self.slot_req.count(None) < self.slots:
-                self._run_chunk()
+                run()
 
     def run(self, requests: list[Request]) -> list[Request]:
         self.submit(requests)

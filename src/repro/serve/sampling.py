@@ -1,0 +1,114 @@
+"""Device-side sampling for the serve engine (DESIGN.md §5.3).
+
+``Sampler`` generalizes the engine's original ``greedy_sample`` to
+temperature / top-k / top-p, all computed on device inside the jitted
+prefill / chunk-scan dispatches (the PRNG key rides the scan carry as a
+per-slot ``(seed, token-index)`` pair, not a key tensor).
+
+Determinism contract: the key for token ``i`` of a request with seed ``s``
+is ``fold_in(fold_in(base, s), i)`` — a pure function of the *request*, not
+of the slot it landed in or of which other requests share the batch.  Two
+consequences the tests pin down:
+
+* re-ordered submissions reproduce identical token streams per request
+  (``tests/test_serve.py::test_seeded_sampling_order_independent``);
+* speculative verification can recompute the exact token the
+  non-speculative path would have sampled at any position, which is what
+  makes spec decode output-identical under every sampling mode, not just
+  greedy (the verify pass samples position ``j`` with the key for token
+  index ``tok_idx + j``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Folding a per-request seed and a per-request token index into this base
+# key gives each (request, position) pair an independent stream.
+_BASE_KEY = 0x5EED
+
+
+def sample_keys(seeds: jnp.ndarray, tok_idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot PRNG keys folded from (request seed, token index).
+
+    ``seeds``/``tok_idx``: (n,) int32 -> (n, 2) uint32 keys.  Independent of
+    slot assignment and batch composition by construction."""
+
+    def one(seed, idx):
+        k = jax.random.fold_in(jax.random.PRNGKey(_BASE_KEY), seed)
+        return jax.random.fold_in(k, idx)
+
+    return jax.vmap(one)(seeds, tok_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """greedy | temperature | top_k | top_p over the last-position logits."""
+
+    mode: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.mode not in ("greedy", "temperature", "top_k", "top_p"):
+            raise ValueError(f"unknown sampling mode: {self.mode!r}")
+        if self.mode == "top_k" and self.top_k < 1:
+            raise ValueError("top_k mode needs top_k >= 1")
+        if self.mode == "top_p" and not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p mode needs 0 < top_p <= 1")
+
+    @classmethod
+    def from_config(cls, cfg) -> "Sampler":
+        return cls(mode=cfg.sampling, temperature=cfg.temperature,
+                   top_k=cfg.top_k, top_p=cfg.top_p)
+
+    @property
+    def needs_keys(self) -> bool:
+        return self.mode != "greedy"
+
+    def _mask_logits(self, lf: jnp.ndarray) -> jnp.ndarray:
+        """Apply the mode's support restriction to (n, v) fp32 logits."""
+        v = lf.shape[-1]
+        if self.mode == "top_k":
+            k = min(self.top_k, v)
+            kth = jnp.sort(lf, axis=-1)[:, v - k][:, None]
+            return jnp.where(lf >= kth, lf, -jnp.inf)
+        if self.mode == "top_p":
+            desc = jnp.sort(lf, axis=-1)[:, ::-1]
+            probs = jax.nn.softmax(desc, axis=-1)
+            csum = jnp.cumsum(probs, axis=-1)
+            # Keep the smallest prefix whose mass reaches top_p: a token
+            # survives iff the mass strictly before it is < top_p (the
+            # first token always survives).
+            keep = (csum - probs) < self.top_p
+            thr = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
+                          keepdims=True)
+            return jnp.where(lf >= thr, lf, -jnp.inf)
+        return lf
+
+    def __call__(self, logits: jnp.ndarray,
+                 keys: jnp.ndarray | None = None) -> jnp.ndarray:
+        """(n, v) or (n, s, v) logits -> (n,) int32 sampled tokens.
+
+        3-D logits sample the last position (the engine's prefill path).
+        ``keys`` ((n, 2) uint32, from :func:`sample_keys`) is required for
+        the stochastic modes and ignored by greedy."""
+        if logits.ndim == 3:
+            logits = logits[:, -1]
+        lf = logits.astype(jnp.float32)
+        if self.mode == "greedy":
+            return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        assert keys is not None, f"{self.mode} sampling needs PRNG keys"
+        # Gumbel-max over temperature-scaled, support-masked logits.  As
+        # temperature -> 0 the scaled gaps dwarf the Gumbel noise, so the
+        # sample converges to exact argmax (tests pin this down).
+        lf = self._mask_logits(lf / max(self.temperature, 1e-8))
+        return jax.vmap(jax.random.categorical)(keys, lf).astype(jnp.int32)
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    """The seed engine's sampler (kept for callers that want bare argmax)."""
+    return jnp.argmax(logits[:, -1], axis=-1)

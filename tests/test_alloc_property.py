@@ -1,0 +1,104 @@
+"""Property tests for the paged free-list allocator (DESIGN.md §5.2).
+
+`serve.engine.PageAllocator` backs paged-KV admission: requests are
+admitted only while their worst-case page count fits the free list, and
+`_finish` returns pages.  Random alloc/free/finish interleavings must
+never double-allocate a page, never leak one (free + held is always a
+partition of the pool), and never over-commit (alloc yields None instead
+of dipping below zero free pages) — the "admission never exceeds free
+pages" gate.
+
+Skips gracefully when hypothesis is absent (see requirements-dev.txt).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.engine import PageAllocator  # noqa: E402
+
+# An op is ("alloc", n_pages) or ("free", fraction-of-held-to-release);
+# frees release a prefix of the live allocations (requests finishing).
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(min_value=0, max_value=12)),
+        st.tuples(st.just("free"), st.floats(min_value=0.0, max_value=1.0)),
+    ),
+    max_size=60,
+)
+
+
+def _check_partition(alloc: PageAllocator, live: list[list[int]]):
+    free = alloc.free_pages
+    held = [p for ids in live for p in ids]
+    # No double allocation, inside or across requests.
+    assert len(held) == len(set(held)), "page handed out twice"
+    assert not set(free) & set(held), "page simultaneously free and held"
+    # No leak: free + held is exactly the pool.
+    assert sorted(free + held) == list(range(alloc.n_pages))
+    assert alloc.held_pages == set(held)
+
+
+@settings(max_examples=200, deadline=None)
+@given(n_pages=st.integers(min_value=0, max_value=16), ops=_OPS)
+def test_alloc_free_sequences_preserve_pool(n_pages, ops):
+    alloc = PageAllocator(n_pages)
+    live: list[list[int]] = []
+    for op, arg in ops:
+        if op == "alloc":
+            before = alloc.free_count()
+            ids = alloc.alloc(arg)
+            if arg > before:
+                # Admission gate: over-commit must refuse, not over-draw.
+                assert ids is None
+                assert alloc.free_count() == before
+            else:
+                assert ids is not None and len(ids) == arg
+                live.append(ids)
+        else:
+            n_release = round(arg * len(live))
+            for ids in live[:n_release]:
+                alloc.free(ids)
+            live = live[n_release:]
+        _check_partition(alloc, live)
+    # Draining everything restores the full pool.
+    for ids in live:
+        alloc.free(ids)
+    _check_partition(alloc, [])
+    assert sorted(alloc.free_pages) == list(range(n_pages))
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=_OPS)
+def test_alloc_never_exceeds_free_pages(ops):
+    """Re-admission pressure: total held can never exceed the pool, no
+    matter the interleaving (the free list is the only admission token)."""
+    alloc = PageAllocator(8)
+    live: list[list[int]] = []
+    for op, arg in ops:
+        if op == "alloc":
+            ids = alloc.alloc(arg)
+            if ids is not None:
+                live.append(ids)
+        elif live:
+            alloc.free(live.pop())
+        assert sum(len(x) for x in live) + alloc.free_count() == 8
+        assert sum(len(x) for x in live) <= 8
+
+
+def test_free_rejects_unheld_pages():
+    alloc = PageAllocator(4)
+    ids = alloc.alloc(2)
+    with pytest.raises(AssertionError, match="not held"):
+        alloc.free([p for p in range(4) if p not in ids][:1])
+    with pytest.raises(AssertionError, match="duplicate"):
+        alloc.free([ids[0], ids[0]])   # same page twice in one call
+    alloc.free(ids)
+    with pytest.raises(AssertionError, match="not held"):
+        alloc.free(ids)   # double free
+
+
+def test_alloc_negative_rejected():
+    with pytest.raises(ValueError):
+        PageAllocator(4).alloc(-1)

@@ -1,0 +1,178 @@
+"""Seedable sampler statistical tests (DESIGN.md §5.3).
+
+The Sampler is the serving-side sampling abstraction: greedy / temperature
+/ top-k / top-p with per-request keys folded from (seed, token index).
+These tests pin down the statistical contracts the serve identity matrix
+relies on: temperature -> 0 collapses to exact greedy, top-k never leaves
+the k-largest support, top-p keeps exactly the smallest prefix whose mass
+reaches p, and keys are a pure function of (seed, index) — never of slot.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.draft import ngram_propose
+from repro.serve.sampling import Sampler, greedy_sample, sample_keys
+
+
+def _rand_logits(key, b=8, v=64):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, v), jnp.float32)
+
+
+def _keys(seed_lo, n, idx=0):
+    return sample_keys(
+        jnp.arange(seed_lo, seed_lo + n, dtype=jnp.int32),
+        jnp.full((n,), idx, jnp.int32),
+    )
+
+
+def test_greedy_matches_argmax_and_ignores_keys():
+    logits = _rand_logits(0)
+    s = Sampler("greedy")
+    np.testing.assert_array_equal(
+        np.asarray(s(logits)), np.asarray(jnp.argmax(logits, -1))
+    )
+    # 3-D logits sample the last position (the engine's prefill shape).
+    np.testing.assert_array_equal(
+        np.asarray(s(logits[:, None, :])), np.asarray(jnp.argmax(logits, -1))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(greedy_sample(logits[:, None, :])),
+        np.asarray(jnp.argmax(logits, -1)),
+    )
+
+
+def test_temperature_to_zero_converges_to_greedy_exactly():
+    """As temperature -> 0 the scaled logit gaps dwarf the Gumbel noise:
+    the sample must EQUAL argmax, not just approach it."""
+    logits = _rand_logits(1, b=16, v=128)
+    cold = Sampler("temperature", temperature=1e-6)
+    ref = np.asarray(jnp.argmax(logits, -1))
+    for trial in range(8):
+        got = np.asarray(cold(logits, _keys(100 * trial, 16)))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_warm_temperature_actually_samples():
+    """Sanity check that the statistical tests below aren't vacuous: at
+    temperature 1 different keys produce different draws somewhere."""
+    logits = _rand_logits(2, b=4, v=16)
+    warm = Sampler("temperature", temperature=1.0)
+    draws = {
+        tuple(np.asarray(warm(logits, _keys(t, 4)))) for t in range(32)
+    }
+    assert len(draws) > 1
+
+
+def test_top_k_never_leaves_top_k_support():
+    logits = _rand_logits(3, b=4, v=32)
+    for k in (1, 2, 5):
+        s = Sampler("top_k", top_k=k, temperature=1.0)
+        allowed = np.asarray(
+            jnp.argsort(logits, axis=-1)[:, -k:]
+        )
+        for trial in range(64):
+            got = np.asarray(s(logits, _keys(1000 + trial, 4)))
+            for b in range(4):
+                assert got[b] in allowed[b], (
+                    f"top_k={k} emitted token {got[b]} outside the "
+                    f"{k}-largest logits of row {b}"
+                )
+
+
+def test_top_k_one_is_greedy():
+    logits = _rand_logits(4)
+    s = Sampler("top_k", top_k=1, temperature=1.0)
+    np.testing.assert_array_equal(
+        np.asarray(s(logits, _keys(0, logits.shape[0]))),
+        np.asarray(jnp.argmax(logits, -1)),
+    )
+
+
+def test_top_p_mass_bound_on_crafted_logits():
+    """Crafted distribution [0.5, 0.3, 0.15, 0.05]: the kept set is the
+    smallest prefix whose mass reaches top_p.  Thresholds sit away from
+    the cumulative-mass boundaries (0.5, 0.8, 0.95) so float rounding in
+    the softmax cannot flip the expected support."""
+    probs = np.asarray([0.5, 0.3, 0.15, 0.05])
+    logits = jnp.asarray(np.log(probs))[None, :].repeat(4, axis=0)
+
+    def support(p, trials=96):
+        s = Sampler("top_p", top_p=p, temperature=1.0)
+        out = set()
+        for t in range(trials):
+            out.update(int(x) for x in np.asarray(s(logits, _keys(t, 4))))
+        return out
+
+    assert support(0.45) == {0}
+    assert support(0.75) == {0, 1}
+    assert support(0.9) == {0, 1, 2}
+    assert support(1.0) == {0, 1, 2, 3}
+
+
+def test_top_p_mass_bound_random_logits():
+    """On random logits, every emitted token must belong to the smallest
+    prefix (by descending probability) whose cumulative mass >= top_p."""
+    logits = _rand_logits(5, b=4, v=32)
+    p = 0.7
+    s = Sampler("top_p", top_p=p, temperature=1.0)
+    probs = np.asarray(jax.nn.softmax(logits, axis=-1))
+    order = np.argsort(-probs, axis=-1)
+    allowed = []
+    for b in range(4):
+        csum = np.cumsum(probs[b][order[b]])
+        n_keep = int(np.searchsorted(csum, p)) + 1
+        allowed.append(set(order[b][:n_keep].tolist()))
+    for trial in range(64):
+        got = np.asarray(s(logits, _keys(5000 + trial, 4)))
+        for b in range(4):
+            assert int(got[b]) in allowed[b]
+
+
+def test_sample_keys_are_slot_independent():
+    """The key for (seed, index) must not depend on the position within the
+    batch vector — the property that makes re-ordered submissions
+    reproduce identical streams."""
+    k1 = sample_keys(jnp.asarray([5, 9], jnp.int32), jnp.asarray([3, 3]))
+    k2 = sample_keys(jnp.asarray([9, 5], jnp.int32), jnp.asarray([3, 3]))
+    np.testing.assert_array_equal(np.asarray(k1[0]), np.asarray(k2[1]))
+    np.testing.assert_array_equal(np.asarray(k1[1]), np.asarray(k2[0]))
+    # Distinct (seed, index) pairs get distinct keys.
+    k3 = sample_keys(jnp.asarray([5], jnp.int32), jnp.asarray([4]))
+    assert not np.array_equal(np.asarray(k1[0]), np.asarray(k3[0]))
+
+
+def test_sampler_validation():
+    with pytest.raises(ValueError, match="mode"):
+        Sampler("beam")
+    with pytest.raises(ValueError, match="top_k"):
+        Sampler("top_k", top_k=0)
+    with pytest.raises(ValueError, match="top_p"):
+        Sampler("top_p", top_p=0.0)
+    with pytest.raises(AssertionError, match="keys"):
+        Sampler("temperature")(jnp.zeros((1, 4)))
+
+
+def test_ngram_proposer_suffix_match_and_fallback():
+    """Draft = continuation of the most recent earlier suffix occurrence;
+    no occurrence (or too-short history) falls back to the last token."""
+    hist = jnp.zeros((3, 12), jnp.int32)
+    hist = hist.at[0, :7].set(jnp.asarray([1, 2, 3, 4, 1, 2, 3]))
+    hist = hist.at[1, :4].set(jnp.asarray([9, 8, 7, 6]))
+    hist = hist.at[2, :2].set(jnp.asarray([5, 5]))
+    hlen = jnp.asarray([7, 4, 2], jnp.int32)
+    d = np.asarray(ngram_propose(hist, hlen, ngram=3, k=4))
+    # Slot 0: suffix [1,2,3] matched at p=0 -> continuation [4,1,2,3].
+    np.testing.assert_array_equal(d[0], [4, 1, 2, 3])
+    # Slot 1: no earlier occurrence -> repeat last token.
+    np.testing.assert_array_equal(d[1], [6, 6, 6, 6])
+    # Slot 2: history shorter than the ngram -> fallback.
+    np.testing.assert_array_equal(d[2], [5, 5, 5, 5])
+
+
+def test_ngram_proposer_prefers_most_recent_match():
+    # [7,8] occurs at p=0 (-> 1) and p=3 (-> 2): the later context wins.
+    hist = jnp.asarray([[7, 8, 1, 7, 8, 2, 0, 7, 8]], jnp.int32)
+    d = np.asarray(ngram_propose(hist, jnp.asarray([9]), ngram=2, k=2))
+    np.testing.assert_array_equal(d[0], [2, 0])
