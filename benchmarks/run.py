@@ -23,6 +23,9 @@ figure-specific metrics.
 * ``serve_spec`` — speculative decode on the repeat-heavy smoke workload:
   acceptance rate, tokens per verify round, spec/non-spec throughput
   ratio, spec-vs-plain bit-identity asserted (greedy + seeded sampling)
+* ``serve_prefix`` — prefix sharing on the many-slots-one-system-prompt
+  workload: effective-capacity multiple (>= 2x asserted), suffix-only
+  TTFT cut vs unshared paged, shared-vs-unshared bit-identity asserted
 
 so BENCH_*.json files can track the planning-pipeline and serving perf
 trajectories across PRs.  ``--analytic-only`` skips the measured (jit
@@ -134,8 +137,16 @@ def main(argv=None) -> None:
                 reps=max(1, args.reps)
             )
             _emit(spec_rows, rows)
+            # Prefix sharing on the shared-system-prompt workload:
+            # asserts shared-vs-unshared bit-identity and the >= 2x
+            # effective-capacity floor, reports the suffix-only TTFT cut.
+            prefix_rows, prefix_summary = serve_bench.prefix_rows(
+                reps=max(1, args.reps)
+            )
+            _emit(prefix_rows, rows)
             serve_summary = {**serve_summary, **paged_summary,
-                             **family_summary, **spec_summary}
+                             **family_summary, **spec_summary,
+                             **prefix_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 

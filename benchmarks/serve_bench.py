@@ -26,11 +26,18 @@ Emitted metrics (also merged into ``benchmarks.run --json`` output):
                              throughput ratio, with spec-vs-plain
                              bit-identity asserted (greedy AND seeded
                              temperature sampling)
+* ``serve_prefix``         — prefix sharing on the many-slots-one-system-
+                             prompt workload (``prefix_rows``): effective-
+                             capacity multiple (worst-case pages vs pages
+                             actually held, asserted >= 2x), suffix-only
+                             TTFT vs full-prefill TTFT, with shared-vs-
+                             unshared bit-identity asserted
 
 ``python -m benchmarks.serve_bench --identity-only`` runs only the
 bit-identity checks (the CI gate) — paged vs contiguous, speculative vs
-plain (greedy + seeded sampling), and the speculative acceptance-rate
-floor — and exits nonzero on any violation.
+plain (greedy + seeded sampling) with the acceptance-rate floor, and
+shared-prefix vs unshared with the >= 2x effective-capacity floor — and
+exits nonzero on any violation.
 """
 from __future__ import annotations
 
@@ -287,6 +294,155 @@ def paged_rows(chunk_size: int = CHUNK, reps: int = 3, warm: bool = True):
         "serve_paged_over_contiguous": ratio,
         "serve_paged_effective_capacity_x": eff,
     }
+    return [row], summary
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: many slots, one system prompt (DESIGN.md §5.4)
+# ---------------------------------------------------------------------------
+
+PREFIX_SLOTS = 8
+PREFIX_PAGE = 16
+PREFIX_SYS = 3 * PREFIX_PAGE   # 48-token system prompt = 3 full shared pages
+PREFIX_NEW = 16
+PREFIX_MAX_LEN = 80
+# Worst case per request: 48 sys + 8 tail + 16 new - 1 = 71 positions -> 5
+# pages; 8 unshared requests demand 40 pages.  Shared, the wave needs
+# 5 (owner) + 7 x 2 (suffix-only) = 19 — so a 24-page pool admits all 8 at
+# once where the unshared engine serializes at 4.
+PREFIX_POOL = 24
+# CI floor: worst-case page demand over pages actually held must stay >= 2x
+# (measured 2.1x on this workload; deterministic page accounting, not wall
+# time, so a drop signals an allocator/trie regression).
+PREFIX_CAPACITY_FLOOR = 2.0
+
+
+def _prefix_requests(cfg, seed=0):
+    """One shared system prompt, per-request user tails: the prefix-hit
+    serving shape (returns the system prompt too, for the TTFT primer)."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab, size=PREFIX_SYS).astype(np.int32)
+    reqs = [
+        Request(prompt=np.concatenate(
+            [sys_p, rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)]),
+            max_new_tokens=PREFIX_NEW)
+        for n in rng.integers(4, 9, size=PREFIX_SLOTS)
+    ]
+    return sys_p, reqs
+
+
+def prefix_rows(reps: int = 3, identity_only: bool = False):
+    """Shared-prefix serving vs unshared paged on the many-slots-one-
+    system-prompt workload.
+
+    Always asserts (the CI ``shared_prefix`` gate): bit-identical outputs,
+    the >= ``PREFIX_CAPACITY_FLOOR`` effective-capacity multiple (unshared
+    worst-case page demand over pages the shared engine actually held),
+    and single-wave admission under a pool the unshared engine serializes
+    on.  In full mode additionally measures suffix-only TTFT: a primer
+    request keeps the system prompt resident, then a fresh wave admits
+    against it — shared admissions prefill only their few-token tails."""
+    base = get_config(SERVE_ARCH, smoke=True)
+    if not identity_only:
+        base = dataclasses.replace(base, **PAGED_BENCH_DIMS)
+    paged_cfg = dataclasses.replace(
+        base, cache_layout="paged", kv_page_size=PREFIX_PAGE
+    )
+    shared_cfg = dataclasses.replace(paged_cfg, prefix_sharing=True)
+    params = build_model(base).init(jax.random.PRNGKey(0))
+
+    def engine(c):
+        return ServeEngine(c, params, batch_slots=PREFIX_SLOTS,
+                           max_len=PREFIX_MAX_LEN, chunk_size=8,
+                           n_pages=PREFIX_POOL)
+
+    # -- identity + effective capacity (always run; the CI gate) -----------
+    engines, outs = {}, {}
+    for name, c in (("unshared", paged_cfg), ("shared", shared_cfg)):
+        eng = engine(c)
+        _, reqs = _prefix_requests(base, seed=1)
+        eng.run(reqs)
+        engines[name], outs[name] = eng, reqs
+    mismatch = [
+        (a.generated, b.generated)
+        for a, b in zip(outs["unshared"], outs["shared"])
+        if a.generated != b.generated
+    ]
+    assert not mismatch, (
+        f"shared-prefix != unshared on {len(mismatch)} request(s): "
+        f"{mismatch[0]}"
+    )
+    eng_s, eng_u = engines["shared"], engines["unshared"]
+    demand = sum(eng_u._pages_needed(r) for r in outs["unshared"])
+    # Snapshot the identity-phase peak NOW: the timed phase below admits a
+    # primer on the same engine and raises the cumulative peak, and the
+    # reported ratio must stay consistent with the pages it was computed
+    # from.
+    peak_shared = eng_s.stats["peak_pages_held"]
+    capacity_x = demand / peak_shared
+    assert capacity_x >= PREFIX_CAPACITY_FLOOR, (
+        f"effective capacity {capacity_x:.2f}x dropped below the "
+        f"{PREFIX_CAPACITY_FLOOR}x floor (demand {demand} pages, peak held "
+        f"{peak_shared})"
+    )
+    assert eng_s.stats["admission_waves"] == 1, "shared wave split"
+    assert eng_u.stats["admission_waves"] >= 2, (
+        "unshared pool unexpectedly fit the whole wave — workload no "
+        "longer exercises sharing"
+    )
+    assert eng_s.stats["prefix_hits"] == PREFIX_SLOTS - 1
+    if identity_only:
+        print(f"shared_prefix: bit-identical, effective capacity "
+              f"{capacity_x:.2f}x >= floor {PREFIX_CAPACITY_FLOOR}x, "
+              f"{PREFIX_SLOTS} slots in one admission wave")
+        return [], {}
+
+    # -- timed: suffix-only TTFT against a resident system prompt ----------
+    # A primer keeps the system prompt's pages referenced while the wave
+    # admits, so every shared admission prefills only its tail (the
+    # pad bucket collapses from 64 to 8 wide).
+    ttft, tok_s = {}, {}
+    for name, eng in engines.items():
+        best_ttft = best_tok = None
+        # Rep -1 is an untimed warm-up: the primer-then-wave schedule
+        # compiles the suffix-width prefill signature (and, shared, the
+        # suffix x full-prompt history pad combo) that the identity run
+        # above never exercised.
+        for rep in range(-1, max(1, reps)):
+            sys_p, reqs = _prefix_requests(base, seed=1)
+            rng = np.random.default_rng(2 + rep)
+            primer = Request(prompt=np.concatenate(
+                [sys_p, rng.integers(0, base.vocab, size=4).astype(np.int32)]),
+                max_new_tokens=24)
+            eng.submit([primer])
+            eng._admit_wave()
+            eng.submit(reqs)
+            t0 = time.perf_counter()
+            eng.drain()
+            wall = time.perf_counter() - t0
+            if rep < 0:
+                continue
+            m = float(np.mean([r.ttft_s for r in reqs]))
+            n_tok = sum(len(r.generated) for r in reqs + [primer])
+            best_ttft = m if best_ttft is None else min(best_ttft, m)
+            best_tok = (n_tok / wall if best_tok is None
+                        else max(best_tok, n_tok / wall))
+        ttft[name], tok_s[name] = best_ttft, best_tok
+    row = {
+        "name": "serve/prefix_shared_sysprompt",
+        "us_per_call": 1e6 / tok_s["shared"],
+        "tok_s": tok_s["shared"],
+        "unshared_tok_s": tok_s["unshared"],
+        "ttft_s": ttft["shared"],
+        "unshared_ttft_s": ttft["unshared"],
+        "ttft_cut_x": ttft["unshared"] / ttft["shared"],
+        "effective_capacity_x": capacity_x,
+        "peak_pages_shared": peak_shared,
+        "worst_case_pages": demand,
+        "prefix_hit_rate": eng_s.serve_stats()["prefix_hit_rate"],
+        "bit_identical": True,
+    }
+    summary = {"serve_prefix": {k: v for k, v in row.items() if k != "name"}}
     return [row], summary
 
 
@@ -571,21 +727,26 @@ if __name__ == "__main__":
     ap.add_argument("--identity-only", action="store_true",
                     help="run only the bit-identity checks — paged vs "
                          "contiguous, speculative vs plain (greedy + "
-                         "seeded sampling), and the spec acceptance floor "
-                         "(CI gate); nonzero exit on any violation")
+                         "seeded sampling) with the spec acceptance floor, "
+                         "and shared-prefix vs unshared with the effective-"
+                         "capacity floor (CI gate); nonzero exit on any "
+                         "violation")
     args = ap.parse_args()
     if args.identity_only:
         family_rows(identity_only=True)
         paged_rows(reps=1, warm=False)
         spec_rows(identity_only=True)
+        prefix_rows(identity_only=True)
         print("serve bit-identity: PASS")
     else:
         rows, summary = serve_rows()
         prows, psummary = paged_rows()
         frows, fsummary = family_rows()
         srows, ssummary = spec_rows()
-        for r in rows + prows + frows + srows:
+        xrows, xsummary = prefix_rows()
+        for r in rows + prows + frows + srows + xrows:
             print(r)
         print(json.dumps(
-            {**summary, **psummary, **fsummary, **ssummary}, indent=1
+            {**summary, **psummary, **fsummary, **ssummary, **xsummary},
+            indent=1,
         ))

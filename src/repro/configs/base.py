@@ -47,6 +47,14 @@ class ModelConfig:
     # shared across slots via a per-slot page table (DESIGN.md §5.2).
     cache_layout: str = "contiguous"   # "contiguous" | "paged"
     kv_page_size: int = 16             # tokens per page ("paged" only)
+    # Prefix sharing (serving, DESIGN.md §5.4): admission attaches a new
+    # request to already-resident full prefix pages via the host-side radix
+    # trie (serve.prefix) and refcounted page pool, prefilling only the
+    # unshared suffix.  Requires the paged layout and a pure-KV decoder
+    # family (dense/moe): recurrent state is not page-shareable and
+    # encdec/vlm prefix KV depends on per-slot source context, so those
+    # engines fall back to unshared bookkeeping.
+    prefix_sharing: bool = False
     # Speculative decode (serving, DESIGN.md §5.3): an on-device n-gram
     # proposer drafts spec_k tokens per slot; one multi-token verify
     # dispatch accepts a ragged per-slot prefix and rolls the rest back.

@@ -355,6 +355,14 @@ def append_kv(cache_kv: jnp.ndarray, new: jnp.ndarray, lengths: jnp.ndarray,
 # logical page indices to physical page ids (-1 = unmapped).  The serve
 # engine's host-side free-list assigns pages at admission, so HBM cost
 # follows each request's actual footprint instead of slots x max_len.
+#
+# Nothing here knows whether two tables alias the same physical page:
+# gather/scatter are pure functions of (pool, table), so prefix sharing
+# (DESIGN.md §5.4) is entirely a host-side page-table/refcount concern —
+# slots whose tables map a shared page read identical bytes, and write
+# isolation holds because the engine only ever shares pages that sit
+# wholly below every sharer's cursor (the scatter never writes below
+# `lengths`, and drop-semantics fence everything else).
 # ---------------------------------------------------------------------------
 
 def paged_kv_spec(batch: int, max_len: int, page_size: int,
@@ -414,7 +422,14 @@ def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
     contract and masked by the caller's ``kv_len``, exactly like the stale
     tail bytes of the contiguous ring.  With page_size dividing max_len the
     gathered width equals the contiguous ring width, so the downstream
-    online-softmax is bit-identical between layouts."""
+    online-softmax is bit-identical between layouts.
+
+    Layout-pure under sharing: the gather depends only on (pool bytes,
+    table entries), never on which slot "owns" a page — tables that alias
+    the same physical page (prefix sharing, DESIGN.md §5.4) materialize
+    bit-identical rows for the aliased positions, including within the
+    admission dispatch that writes them (the scatter's output pool is the
+    gather's input, so a same-wave sharer reads the owner's fresh K/V)."""
     N, psz = pool.shape[0], pool.shape[1]
     b, P = pages.shape
     g = jnp.take(pool, jnp.clip(pages, 0, N - 1), axis=0)     # (b, P, psz, ...)

@@ -30,6 +30,16 @@ loop, not the policy search, is the artifact that must be fast):
   exactly the pages its worst case needs and admission gates on free
   pages, so a pool smaller than ``slots x max_len`` serves mixed
   long/short traffic while staying bit-identical to the contiguous ring.
+* **Prefix sharing** (``cfg.prefix_sharing``, DESIGN.md §5.4) — a
+  host-side radix trie over full prompt pages (`serve.prefix`) lets
+  admission attach a new request to already-resident prefix pages: the
+  slot's page table aliases the shared pages (refcounted in the
+  `PageAllocator`; a page frees only at refcount zero) and prefill runs
+  only over the unshared suffix at a page-aligned nonzero cursor.
+  Divergence is copy-on-write by allocation — the first divergent page is
+  always a private page, shared pages are never written.  Requires the
+  paged layout and a pure-KV decoder family (dense/moe); other engines
+  fall back to unshared bookkeeping.
 * **Speculative decode** (``cfg.spec_k > 0``, DESIGN.md §5.3) — an
   on-device n-gram proposer (`serve.draft`) drafts ``spec_k`` tokens per
   slot from the slot's own history; ONE multi-token verify dispatch
@@ -62,6 +72,7 @@ from repro.core.characterize import attention_op
 from repro.models import build_model
 from repro.models.common import paged_kv_spec
 from repro.serve.draft import ngram_propose
+from repro.serve.prefix import PrefixIndex
 from repro.serve.sampling import (  # noqa: F401  (greedy_sample re-export)
     Sampler,
     greedy_sample,
@@ -79,6 +90,8 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    prefix_tokens: int = 0        # prompt tokens attached from shared pages
+                                  # at admission (0 = fully prefilled)
     ttft_s: float | None = None        # admission -> first token (prefill)
     queue_wait_s: float | None = None  # submit -> admission (queueing only)
     submit_t: float | None = None
@@ -95,13 +108,27 @@ def _pad_bucket(n: int, cap: int) -> int:
 
 
 class PageAllocator:
-    """Host-side LIFO free-list over a fixed page pool (DESIGN.md §5.2).
+    """Refcounted host-side LIFO free-list over a fixed page pool
+    (DESIGN.md §5.2, refcounts §5.4).
 
-    Invariants (property-tested in ``tests/test_alloc_property.py``):
+    Every held page carries a reference count: ``alloc`` hands out pages
+    at refcount 1, ``share`` adds a reference to already-held pages (a new
+    slot's page table aliasing a resident prefix page), and ``release``
+    drops one — a page returns to the free list only at refcount zero, so
+    a shared prefix page survives its original owner finishing.
 
-    * a page is never handed out twice without an intervening ``free``,
-    * ``alloc`` never over-commits — it returns None instead of dipping
-      below zero free pages (admission gating),
+    Invariants (property-tested in ``tests/test_alloc_property.py``,
+    including a hypothesis state machine over alloc/share/release
+    interleavings):
+
+    * a page is never handed out twice without an intervening final
+      ``release``,
+    * ``alloc`` is atomic and never over-commits — when ``n`` exceeds the
+      free count it returns None having popped nothing (admission
+      gating; the guard predates refcounting but was untested, and is
+      now pinned by a regression test),
+    * no page is freed while references remain, and references are
+      conserved across share/release interleavings,
     * held + free is a partition of the pool at all times (no leaks).
     """
 
@@ -109,7 +136,7 @@ class PageAllocator:
         assert n_pages >= 0
         self.n_pages = n_pages
         self._free = list(range(n_pages))
-        self._held: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def free_pages(self) -> list[int]:
@@ -117,31 +144,65 @@ class PageAllocator:
 
     @property
     def held_pages(self) -> set[int]:
-        return set(self._held)
+        return set(self._refs)
 
     def free_count(self) -> int:
         return len(self._free)
 
+    def ref_count(self, page: int) -> int:
+        """Current reference count of ``page`` (0 if free)."""
+        return self._refs.get(page, 0)
+
+    def total_refs(self) -> int:
+        return sum(self._refs.values())
+
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages (LIFO), or None if the pool can't cover them."""
+        """Pop ``n`` pages (LIFO) at refcount 1, or None — having popped
+        NOTHING — if the pool can't cover all ``n`` (atomic failure)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         ids = [self._free.pop() for _ in range(n)]
-        assert not self._held.intersection(ids), "double-allocated page"
-        self._held.update(ids)
+        assert not any(i in self._refs for i in ids), "double-allocated page"
+        for i in ids:
+            self._refs[i] = 1
         return ids
 
-    def free(self, ids) -> None:
+    def share(self, ids) -> None:
+        """Add one reference to each held page in ``ids`` (a new sharer's
+        page table now aliases them).  Sharing a free page is a bug."""
+        ids = list(ids)
+        assert len(ids) == len(set(ids)), (
+            f"duplicate page ids in share(): {ids}"
+        )
+        bad = [i for i in ids if i not in self._refs]
+        assert not bad, f"sharing pages not held: {bad}"
+        for i in ids:
+            self._refs[i] += 1
+
+    def release(self, ids) -> list[int]:
+        """Drop one reference per page; pages reaching refcount zero
+        return to the free list.  Returns the ids actually freed (the
+        engine evicts their trie nodes)."""
         ids = list(ids)
         assert len(ids) == len(set(ids)), (
             f"duplicate page ids in free(): {ids}"
         )
-        bad = [i for i in ids if i not in self._held]
+        bad = [i for i in ids if i not in self._refs]
         assert not bad, f"freeing pages not held: {bad}"
-        self._held.difference_update(ids)
-        self._free.extend(ids)
+        freed = []
+        for i in ids:
+            self._refs[i] -= 1
+            if self._refs[i] == 0:
+                del self._refs[i]
+                self._free.append(i)
+                freed.append(i)
+        return freed
+
+    # Unshared call sites (and the pre-refcount test suite) say "free":
+    # with every refcount at 1 release IS free.
+    free = release
 
 
 class ServeEngine:
@@ -224,6 +285,19 @@ class ServeEngine:
             self.kv_residency = self.policy.kv_policy(
                 self._kv_bytes_per_layer()
             )
+        # Prefix sharing (DESIGN.md §5.4) rides the paged pool: the trie
+        # indexes resident full prompt pages and admission attaches new
+        # requests to them.  Pure-KV decoder families only — recurrent
+        # state (mamba2/zamba2 SSM/conv) is not page-shareable, and
+        # encdec/vlm prefix KV depends on per-slot source context (frames/
+        # vision tokens), so those fall back to unshared bookkeeping.
+        self.prefix_sharing = (
+            bool(cfg.prefix_sharing) and self.paged
+            and cfg.family in ("dense", "moe")
+        )
+        self.prefix = (
+            PrefixIndex(self.page_size) if self.prefix_sharing else None
+        )
         # Recurrent state (SSM/conv) has no per-position validity mask, so
         # the speculative rollback cannot be a cursor rewind: those
         # families re-run the verify block from the pre-verify cache with
@@ -232,7 +306,7 @@ class ServeEngine:
         self._spec_replay = "ssm" in self.cache or "conv" in self.cache
         self._reset_slots = self.model.reset_slots
         self._prefill = jax.jit(
-            self._prefill_fn, donate_argnums=(1, 4, 5, 7, 8, 9, 11)
+            self._prefill_fn, donate_argnums=(1, 6, 7, 9, 10, 11, 13)
         )
         self._decode_chunk = jax.jit(
             self._spec_chunk_fn if self.spec else self._chunk_fn,
@@ -261,6 +335,10 @@ class ServeEngine:
             "spec_rounds": 0,         # active draft/verify rounds
             "draft_proposed": 0,      # spec_k per active round
             "draft_accepted": 0,      # matching draft prefix per round
+            "prefix_hits": 0,         # admissions that attached shared pages
+            "prefix_pages_shared": 0,  # shared-page references taken
+            "prefix_tokens_shared": 0,  # prompt tokens not re-prefilled
+            "peak_pages_held": 0,     # max concurrent pool usage (paged)
         }
 
     # -- policy ------------------------------------------------------------
@@ -315,6 +393,17 @@ class ServeEngine:
                 "pool_positions": self.n_pages * self.page_size,
                 "contiguous_positions": self.slots * self.max_len,
             }
+        # "requested but not enabled" is the graceful-fallback signal
+        # (contiguous layout, KV-free or source-conditioned families).
+        report["prefix_sharing"] = {
+            "requested": bool(self.cfg.prefix_sharing),
+            "enabled": self.prefix_sharing,
+        }
+        if self.prefix is not None:
+            report["prefix_sharing"].update({
+                "trie_nodes": len(self.prefix),
+                "resident_prefix_tokens": self.prefix.resident_tokens(),
+            })
         if self.decode_plan is not None:
             report["decode_attention"] = {
                 "assignment": {
@@ -344,6 +433,12 @@ class ServeEngine:
             out["decode_tokens"] / out["spec_rounds"]
             if out["spec_rounds"] else 0.0
         )
+        # Every admitted request emits exactly one prefill token, so
+        # prefill_tokens doubles as the admission count.
+        out["prefix_hit_rate"] = (
+            out["prefix_hits"] / out["prefill_tokens"]
+            if out["prefill_tokens"] else 0.0
+        )
         return out
 
     # -- device-side step functions (jitted once) --------------------------
@@ -363,18 +458,31 @@ class ServeEngine:
         return hist.at[jnp.arange(b)[:, None] if positions.ndim == 2
                        else jnp.arange(b), positions].set(tokens, mode="drop")
 
-    def _prefill_fn(self, params, cache, tokens, seg_lens, cur_tok,
-                    remaining, new_remaining, tok_idx, hist, hist_len,
-                    new_seeds, seeds):
+    def _prefill_fn(self, params, cache, tokens, seg_lens, start_lens,
+                    hist_toks, cur_tok, remaining, new_remaining, tok_idx,
+                    hist, hist_len, new_seeds, seeds):
         """Ragged admission prefill: reset re-admitted slots, prefill their
         prompts (seg_lens == 0 parks continuing slots), sample each admitted
         slot's first token on device, and (re)seed the slot's history /
-        token-index / seed state."""
+        token-index / seed state.
+
+        ``start_lens`` is the per-slot attach cursor: 0 for a full prefill,
+        a page-aligned shared-prefix length when the slot rides resident
+        prefix pages (DESIGN.md §5.4) — ``tokens`` then holds only the
+        unshared suffix, positioned (RoPE and scatter) at start + i.
+        ``hist_toks`` always carries the FULL prompt, so the n-gram history
+        an attached slot's drafts mine is identical to the unshared
+        engine's (the full prompt length is start + seg — no extra arg)."""
         b, pad = tokens.shape
+        fpad = hist_toks.shape[1]
         H = hist.shape[1]
         admitted = seg_lens > 0
         if self._reset_slots is not None:
             cache = self._reset_slots(cache, admitted)
+        cache = dict(cache)
+        cache["lengths"] = jnp.where(
+            admitted, start_lens, cache["lengths"]
+        ).astype(jnp.int32)
         logits, cache = self.model.prefill(
             params, cache, tokens, seg_lens=seg_lens
         )
@@ -384,17 +492,18 @@ class ServeEngine:
         remaining = jnp.where(admitted, new_remaining, remaining)
         seeds = jnp.where(admitted, new_seeds, seeds)
         tok_idx = jnp.where(admitted, 1, tok_idx)
-        # History: prompt rows land at 0..seg-1, the first token at seg;
-        # parked slots redirect to H and drop.
-        pos = jnp.broadcast_to(jnp.arange(pad)[None, :], (b, pad))
+        # History: full-prompt rows land at 0..full-1, the first token at
+        # full; parked slots redirect to H and drop.
+        full_seg = start_lens + seg_lens
+        pos = jnp.broadcast_to(jnp.arange(fpad)[None, :], (b, fpad))
         pos = jnp.where(
-            admitted[:, None] & (pos < seg_lens[:, None]), pos, H
+            admitted[:, None] & (pos < full_seg[:, None]), pos, H
         )
-        hist = self._hist_append(hist, pos, tokens)
+        hist = self._hist_append(hist, pos, hist_toks)
         hist = self._hist_append(
-            hist, jnp.where(admitted, seg_lens, H), nxt
+            hist, jnp.where(admitted, full_seg, H), nxt
         )
-        hist_len = jnp.where(admitted, seg_lens + 1, hist_len)
+        hist_len = jnp.where(admitted, full_seg + 1, hist_len)
         return cache, cur_tok, remaining, tok_idx, hist, hist_len, seeds, nxt
 
     def _chunk_fn(self, params, cache, cur_tok, remaining, tok_idx, hist,
@@ -532,6 +641,23 @@ class ServeEngine:
     def _pages_needed(self, r: Request) -> int:
         return -(-self._positions_needed(r) // self.page_size)
 
+    def _shared_prefix(self, r: Request, chunks) -> tuple[list[int], int]:
+        """(pages, tokens): the longest resident full-page prefix of
+        ``r.prompt`` (pre-chunked into ``chunks``) this request can attach
+        to (DESIGN.md §5.4).
+
+        Capped below the prompt's full-page count so the prompt's last
+        token is ALWAYS re-prefilled: the logits seeding decode are
+        computed fresh, never assumed resident — a prompt that is exactly
+        its shared pages would otherwise have an empty suffix and park
+        forever.  The cap also makes the COW case concrete: a prompt
+        ending exactly at a shared-page boundary re-materializes that last
+        page's K/V into a private page (same bytes, private residency)."""
+        pages = self.prefix.lookup(r.prompt, chunks=chunks)
+        cap = (len(r.prompt) - 1) // self.page_size
+        pages = pages[:cap]
+        return pages, len(pages) * self.page_size
+
     def submit(self, requests: list[Request]) -> None:
         # Validate the whole batch before enqueuing any of it, so a
         # rejected request doesn't leave earlier ones half-submitted.
@@ -569,11 +695,15 @@ class ServeEngine:
         r.done = True
         self.slot_req[r.slot] = None
         if self.paged:
-            # Return the slot's pages to the pool.  The device page table is
+            # Drop the slot's references.  Pages shared with live slots
+            # survive (refcount > 0); pages reaching zero return to the
+            # pool and their trie nodes evict.  The device page table is
             # refreshed lazily at the next admission wave; until then the
             # stale row is harmless — the parked slot neither writes KV
             # (seg_lens == 0 drops the scatter) nor has its output read.
-            self.allocator.free(self._slot_pages[r.slot])
+            freed = self.allocator.release(self._slot_pages[r.slot])
+            if self.prefix is not None and freed:
+                self.prefix.evict(freed)
             self._slot_pages[r.slot] = []
             self.page_table[r.slot] = -1
 
@@ -587,31 +717,93 @@ class ServeEngine:
             if self.paged:
                 # Admission gates on free pages (FIFO head-of-line: a
                 # request that doesn't fit waits for pages to free rather
-                # than being overtaken).
-                ids = self.allocator.alloc(self._pages_needed(self.queue[0]))
+                # than being overtaken).  With prefix sharing the head
+                # only needs pages for its UNSHARED suffix; the shared
+                # prefix rides resident pages via a refcount bump.  Alloc
+                # first, share only on success — a gated head must leave
+                # every refcount untouched.
+                head = self.queue[0]
+                shared, shared_len = [], 0
+                chunks = None
+                if self.prefix is not None:
+                    # Chunk the prompt once per REQUEST (memoized on it):
+                    # lookup and register reuse the list, and a page-gated
+                    # head re-tried every chunk boundary doesn't rebuild
+                    # it.  The lookup itself must re-run per attempt — the
+                    # resident chain can grow/shrink while the head waits.
+                    chunks = getattr(head, "_prefix_chunks", None)
+                    if chunks is None:
+                        chunks = self.prefix.chunks(head.prompt)
+                        head._prefix_chunks = chunks
+                    shared, shared_len = self._shared_prefix(head, chunks)
+                ids = self.allocator.alloc(self._pages_needed(head)
+                                           - len(shared))
                 if ids is None:
                     break
+                if shared:
+                    self.allocator.share(shared)
                 r = self.queue.popleft()
-                self._slot_pages[slot] = ids
+                # The chunk memo exists only to amortize head-of-line
+                # retries; drop it at admission so engine-private (and
+                # page-size-dependent) state never outlives the queue.
+                r.__dict__.pop("_prefix_chunks", None)
+                r.prefix_tokens = shared_len
+                table = shared + ids
+                self._slot_pages[slot] = table
                 self.page_table[slot] = -1
-                self.page_table[slot, :len(ids)] = ids
+                self.page_table[slot, :len(table)] = table
+                if self.prefix is not None:
+                    # Index this prompt's own full pages so later requests
+                    # can attach; already-resident chunks keep their
+                    # existing (shared) nodes.
+                    self.prefix.register(r.prompt, table[:len(chunks)],
+                                         chunks=chunks)
+                    if shared:
+                        self.stats["prefix_hits"] += 1
+                        self.stats["prefix_pages_shared"] += len(shared)
+                        self.stats["prefix_tokens_shared"] += shared_len
             else:
                 r = self.queue.popleft()
+                r.prefix_tokens = 0    # contiguous: always a full prefill
             r.admit_t = now
             if r.submit_t is not None:
                 r.queue_wait_s = now - r.submit_t
             wave.append((slot, r))
         if not wave:
             return
-        pad = _pad_bucket(max(len(r.prompt) for _, r in wave), self.max_len)
+        # Attached slots prefill only their unshared suffix (prefix_tokens
+        # is 0 without sharing), so the pad bucket — and the prefill's
+        # compute — shrinks to the widest *suffix* in the wave.  The
+        # n-gram history still seeds from the FULL prompt via a separate
+        # (cheap, scatter-only) buffer, so drafting under sharing matches
+        # the unshared engine.
+        pad = _pad_bucket(
+            max(len(r.prompt) - r.prefix_tokens for _, r in wave),
+            self.max_len,
+        )
+        # The full-prompt history buffer only differs from the prefill
+        # buffer when some wave member attached a prefix; otherwise the
+        # suffix IS the prompt and one buffer serves both arguments.
+        attached = any(r.prefix_tokens for _, r in wave)
         toks = np.zeros((self.slots, pad), np.int32)
+        if attached:
+            hpad = _pad_bucket(
+                max(len(r.prompt) for _, r in wave), self.max_len
+            )
+            htoks = np.zeros((self.slots, hpad), np.int32)
+        else:
+            htoks = toks
         seg = np.zeros((self.slots,), np.int32)
+        start = np.zeros((self.slots,), np.int32)
         new_rem = np.zeros((self.slots,), np.int32)
         new_seeds = np.zeros((self.slots,), np.int32)
         for slot, r in wave:
-            n = len(r.prompt)
-            toks[slot, :n] = r.prompt          # right-pad; scatter drops tail
+            n = len(r.prompt) - r.prefix_tokens
+            toks[slot, :n] = r.prompt[r.prefix_tokens:]   # right-pad; drops
+            if attached:
+                htoks[slot, :len(r.prompt)] = r.prompt
             seg[slot] = n
+            start[slot] = r.prefix_tokens      # page-aligned attach cursor
             new_rem[slot] = r.max_new_tokens - 1
             # Fold arbitrary Python ints (64-bit hashes, negatives) into
             # int32 range: still a pure function of the request's seed, so
@@ -627,16 +819,23 @@ class ServeEngine:
         # Admission consults the policy engine: KV residency for the current
         # occupancy and the (PlanCache-memoized) decode-attention plan.
         self.decode_plan = self._plan_decode()
+        toks_d = jnp.asarray(toks)
+        htoks_d = jnp.asarray(htoks) if attached else toks_d
         (self.cache, self.cur_tok, self.remaining, self.tok_idx, self.hist,
          self.hist_len, self.seeds, nxt) = self._prefill(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(seg),
-            self.cur_tok, self.remaining, jnp.asarray(new_rem),
-            self.tok_idx, self.hist, self.hist_len, jnp.asarray(new_seeds),
-            self.seeds,
+            self.params, self.cache, toks_d, jnp.asarray(seg),
+            jnp.asarray(start), htoks_d, self.cur_tok,
+            self.remaining, jnp.asarray(new_rem), self.tok_idx, self.hist,
+            self.hist_len, jnp.asarray(new_seeds), self.seeds,
         )
         first = np.asarray(nxt)                # host sync: 1 per wave
         self.stats["host_syncs"] += 1
         self.stats["admission_waves"] += 1
+        if self.paged:
+            self.stats["peak_pages_held"] = max(
+                self.stats["peak_pages_held"],
+                self.n_pages - self.allocator.free_count(),
+            )
         now = time.perf_counter()
         for _, r in wave:
             r.generated.append(int(first[r.slot]))

@@ -1,5 +1,22 @@
+import os
+
 import numpy as np
 import pytest
+
+# Hypothesis profiles: CI runs the property suites (allocator refcounts,
+# state machine) under the fixed, derandomized "ci" profile so failures
+# reproduce exactly across runs; "dev" keeps random exploration locally.
+# Per-test @settings decorators override only the fields they name, so
+# derandomization applies to every suite.  Soft dependency — the property
+# tests importorskip hypothesis themselves.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", derandomize=True, deadline=None)
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -1,20 +1,31 @@
-"""Property tests for the paged free-list allocator (DESIGN.md §5.2).
+"""Property tests for the refcounted paged free-list allocator
+(DESIGN.md §5.2, refcounts §5.4).
 
 `serve.engine.PageAllocator` backs paged-KV admission: requests are
 admitted only while their worst-case page count fits the free list, and
-`_finish` returns pages.  Random alloc/free/finish interleavings must
-never double-allocate a page, never leak one (free + held is always a
-partition of the pool), and never over-commit (alloc yields None instead
-of dipping below zero free pages) — the "admission never exceeds free
-pages" gate.
+`_finish` drops references (`release`); prefix sharing adds references
+(`share`) so a page frees only at refcount zero.  Random
+alloc/share/release interleavings — driven by the hypothesis state
+machine below — must never double-allocate a page, never free one while
+references remain, conserve refcounts, never leak (free + held is always
+a partition of the pool), and never over-commit (alloc yields None,
+atomically, instead of dipping below zero free pages) — the "admission
+never exceeds free pages" gate, with or without sharing.
 
-Skips gracefully when hypothesis is absent (see requirements-dev.txt).
+CI runs these under the derandomized ``ci`` hypothesis profile
+(tests/conftest.py); skips gracefully when hypothesis is absent (see
+requirements-dev.txt).
 """
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 
 from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine,
+    invariant,
+    rule,
+)
 
 from repro.serve.engine import PageAllocator  # noqa: E402
 
@@ -85,6 +96,137 @@ def test_alloc_never_exceeds_free_pages(ops):
             alloc.free(live.pop())
         assert sum(len(x) for x in live) + alloc.free_count() == 8
         assert sum(len(x) for x in live) <= 8
+
+
+# ---------------------------------------------------------------------------
+# Refcounted sharing: hypothesis state machine (DESIGN.md §5.4)
+# ---------------------------------------------------------------------------
+
+_POOL = 12
+
+
+class RefcountedAllocatorMachine(RuleBasedStateMachine):
+    """Random alloc/share/release interleavings against a pure-Python
+    refcount mirror.  ``handles`` holds one entry per outstanding
+    reference-set (an allocation, or a sharer's alias of one); releasing
+    a handle drops exactly one reference per page.
+
+    Invariants checked after every step:
+
+    * no page is freed while references remain (held ∩ free == ∅),
+    * refcounts match the mirror exactly (conservation across
+      share/release interleavings),
+    * held + free is a partition of the pool (no leak, no double-alloc),
+    * held never exceeds the pool even under sharing (alloc never
+      over-commits, and a failed alloc changes nothing).
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.alloc = PageAllocator(_POOL)
+        self.mirror: dict[int, int] = {}     # page -> expected refcount
+        self.handles: list[list[int]] = []
+
+    @rule(n=st.integers(min_value=0, max_value=_POOL + 2))
+    def do_alloc(self, n):
+        before_free = self.alloc.free_count()
+        before_refs = self.alloc.total_refs()
+        ids = self.alloc.alloc(n)
+        if n > before_free:
+            # Atomic failure: nothing popped, nothing referenced.
+            assert ids is None
+            assert self.alloc.free_count() == before_free
+            assert self.alloc.total_refs() == before_refs
+        else:
+            assert len(ids) == n == len(set(ids))
+            for i in ids:
+                assert i not in self.mirror, "page handed out twice"
+                self.mirror[i] = 1
+            self.handles.append(list(ids))
+
+    @rule(data=st.data())
+    def do_share(self, data):
+        if not self.handles:
+            return
+        ids = self.handles[
+            data.draw(st.integers(0, len(self.handles) - 1), label="handle")
+        ]
+        self.alloc.share(ids)
+        for i in ids:
+            self.mirror[i] += 1
+        self.handles.append(list(ids))
+
+    @rule(data=st.data())
+    def do_release(self, data):
+        if not self.handles:
+            return
+        ids = self.handles.pop(
+            data.draw(st.integers(0, len(self.handles) - 1), label="handle")
+        )
+        expect_freed = sorted(i for i in ids if self.mirror[i] == 1)
+        freed = self.alloc.release(ids)
+        assert sorted(freed) == expect_freed, "freed despite live refs"
+        for i in ids:
+            self.mirror[i] -= 1
+            if not self.mirror[i]:
+                del self.mirror[i]
+
+    @invariant()
+    def refcounts_conserved(self):
+        held = self.alloc.held_pages
+        free = self.alloc.free_pages
+        assert held == set(self.mirror)
+        for i, refs in self.mirror.items():
+            assert self.alloc.ref_count(i) == refs
+        assert not held & set(free), "page simultaneously free and held"
+        assert sorted(list(free) + list(held)) == list(range(_POOL)), (
+            "free + held is not a partition of the pool"
+        )
+        assert len(held) <= _POOL
+
+
+RefcountedAllocatorMachine.TestCase.settings = settings(
+    max_examples=60, stateful_step_count=50, deadline=None
+)
+TestRefcountedAllocator = RefcountedAllocatorMachine.TestCase
+
+
+@settings(max_examples=100, deadline=None)
+@given(extra=st.integers(min_value=1, max_value=8),
+       held_n=st.integers(min_value=0, max_value=8))
+def test_failed_alloc_is_atomic_and_leaks_nothing(extra, held_n):
+    """The partial-failure path: an alloc exceeding the free count must
+    refuse WITHOUT popping any page or taking any reference.  The guard
+    predates refcounting but was untested; this pins the atomicity (a
+    naive pop-then-check rewrite would leak the popped prefix on
+    failure) and that sharing does not perturb the gating."""
+    alloc = PageAllocator(8)
+    held = alloc.alloc(held_n)
+    shared = held[: held_n // 2]
+    if shared:
+        alloc.share(shared)               # sharing must not change gating
+    free_before = alloc.free_pages
+    refs_before = {i: alloc.ref_count(i) for i in alloc.held_pages}
+    ids = alloc.alloc(len(free_before) + extra)
+    assert ids is None
+    assert alloc.free_pages == free_before
+    assert {i: alloc.ref_count(i) for i in alloc.held_pages} == refs_before
+
+
+def test_share_release_refcount_lifecycle():
+    """A shared page survives its first release and frees on the last."""
+    alloc = PageAllocator(4)
+    ids = alloc.alloc(2)
+    alloc.share(ids)
+    alloc.share([ids[0]])
+    assert alloc.ref_count(ids[0]) == 3 and alloc.ref_count(ids[1]) == 2
+    assert alloc.release(ids) == []              # refs remain: nothing freed
+    assert alloc.release(ids) == [ids[1]]        # ids[0] still shared once
+    assert alloc.ref_count(ids[0]) == 1
+    assert alloc.release([ids[0]]) == [ids[0]]
+    assert sorted(alloc.free_pages) == list(range(4))
+    with pytest.raises(AssertionError, match="not held"):
+        alloc.share(ids)                          # sharing freed pages
 
 
 def test_free_rejects_unheld_pages():

@@ -1,0 +1,115 @@
+"""Unit tests for the host-side prefix trie (serve.prefix, DESIGN.md §5.4).
+
+The trie indexes resident full KV pages by token content; the serve
+engine owns residency (refcounted PageAllocator) and calls ``evict`` when
+pages free.  These tests pin the contract the engine relies on:
+longest-match lookup, full-pages-only participation (a partial page never
+shares), leaf-upward eviction of zero-ref nodes, and clean re-admission
+after release.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.prefix import PrefixIndex
+
+PSZ = 4
+
+
+def _toks(*chunks):
+    """Flatten chunk lists into one token array (np, like r.prompt)."""
+    return np.asarray([t for ch in chunks for t in ch], np.int32)
+
+
+A, B, C, D = (
+    [1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [13, 14, 15, 16]
+)
+
+
+def test_longest_match_lookup():
+    idx = PrefixIndex(PSZ)
+    idx.register(_toks(A, B, C), [10, 11, 12])
+    assert idx.lookup(_toks(A, B, C)) == [10, 11, 12]
+    # Divergence after two chunks: longest match is the shared prefix.
+    assert idx.lookup(_toks(A, B, D)) == [10, 11]
+    assert idx.lookup(_toks(A, D)) == [10]
+    assert idx.lookup(_toks(D, A, B)) == []
+    # A longer query than the resident chain matches the whole chain.
+    assert idx.lookup(_toks(A, B, C, D)) == [10, 11, 12]
+    assert len(idx) == 3
+    assert idx.resident_tokens() == 3 * PSZ
+
+
+def test_partial_page_boundary_never_shared():
+    idx = PrefixIndex(PSZ)
+    # Register a prompt of 2.5 pages: only the 2 FULL pages may be indexed.
+    idx.register(_toks(A, B, [99, 98]), [20, 21])
+    assert len(idx) == 2
+    # Lookup of 1.75 pages matches only the full first page.
+    assert idx.lookup(_toks(A, B[:3])) == [20]
+    # A sub-page prompt can never match anything.
+    assert idx.lookup(_toks(A[:3])) == []
+    # A whole-page query ending at the boundary matches exactly.
+    assert idx.lookup(_toks(A, B)) == [20, 21]
+
+
+def test_register_keeps_existing_nodes():
+    """Re-registering resident content must NOT displace the original
+    page (other slots share it); only new chunks register, and the newly
+    indexed ids are reported back."""
+    idx = PrefixIndex(PSZ)
+    assert idx.register(_toks(A, B), [30, 31]) == [30, 31]
+    # Same prefix from another slot's table: nothing new registered,
+    # lookups keep resolving to the original pages.
+    assert idx.register(_toks(A, B), [40, 41]) == []
+    assert idx.lookup(_toks(A, B)) == [30, 31]
+    # Extending the chain registers only the new tail chunk.
+    assert idx.register(_toks(A, B, C), [40, 41, 42]) == [42]
+    assert idx.lookup(_toks(A, B, C)) == [30, 31, 42]
+
+
+def test_eviction_of_zero_ref_nodes():
+    idx = PrefixIndex(PSZ)
+    idx.register(_toks(A, B, C), [10, 11, 12])
+    idx.register(_toks(A, D), [10, 13])        # sibling branch under A
+    assert len(idx) == 4
+    # Leaf eviction: the chain shortens, siblings survive.
+    assert idx.evict([12]) == 1
+    assert idx.lookup(_toks(A, B, C)) == [10, 11]
+    assert idx.lookup(_toks(A, D)) == [10, 13]
+    # Parent + child freed together (a finishing last sharer): any
+    # argument order works — eviction is depth-ordered internally.
+    assert idx.evict([10, 13, 11]) == 3
+    assert len(idx) == 0
+    assert idx.lookup(_toks(A, B)) == []
+    # Ids never registered (tail/decode pages) are ignored.
+    assert idx.evict([77]) == 0
+
+
+def test_evicting_parent_with_resident_child_asserts():
+    """A parent page freeing before its child breaks the refcount
+    invariant (every sharer holds the whole chain) — fail loudly."""
+    idx = PrefixIndex(PSZ)
+    idx.register(_toks(A, B), [10, 11])
+    with pytest.raises(AssertionError, match="still resident"):
+        idx.evict([10])
+
+
+def test_readmission_after_release():
+    """After a full release/evict cycle the same prompt re-registers
+    cleanly under fresh pages — no stale nodes, no page-id aliasing."""
+    idx = PrefixIndex(PSZ)
+    idx.register(_toks(A, B), [10, 11])
+    idx.evict([11, 10])
+    assert len(idx) == 0
+    # Fresh registration may reuse the very same (recycled) page ids.
+    assert idx.register(_toks(A, B), [11, 10]) == [11, 10]
+    assert idx.lookup(_toks(A, B)) == [11, 10]
+
+
+def test_register_rejects_reused_page_id():
+    """One physical page backs exactly one trie node: registering a
+    held page under a second prefix is an engine bookkeeping bug."""
+    idx = PrefixIndex(PSZ)
+    idx.register(_toks(A), [10])
+    with pytest.raises(AssertionError, match="already registered"):
+        idx.register(_toks(B), [10])

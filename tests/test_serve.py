@@ -480,6 +480,207 @@ def test_kv_policy_decision():
 
 
 # ---------------------------------------------------------------------------
+# Prefix sharing (DESIGN.md §5.4): attaching a request to resident prefix
+# pages must be invisible in the emitted stream — bit-identical to the
+# unshared engine on every cell of {prefix on/off} x {contiguous, paged} x
+# {qwen, zamba2, whisper} — and the refcount lifecycle must never free a
+# page a sharer still references.
+# ---------------------------------------------------------------------------
+
+PREFIX_ARCHS = ["qwen2.5-32b", "zamba2-2.7b", "whisper-small"]
+_PREFIX_SYS = 17      # system-prompt tokens: 2 full pages of 8 + 1 spilled
+
+
+def _prefix_requests(cfg, sys_len=_PREFIX_SYS, seed=4,
+                     spec=((3, 5), (5, 4), (2, 6), (4, 3))):
+    """Many slots, one system prompt: every request is sys + own tail."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab, size=sys_len).astype(np.int32)
+    return [
+        Request(prompt=np.concatenate(
+            [sys_p, rng.integers(0, cfg.vocab, size=n).astype(np.int32)]),
+            max_new_tokens=m)
+        for n, m in spec
+    ]
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("arch", PREFIX_ARCHS)
+def test_prefix_sharing_bit_identical_matrix(arch, layout):
+    """Sharing genuinely engages only for qwen+paged (pure-KV decoder
+    family over the page pool); every other cell verifies the graceful
+    fallback — requested but disabled — leaves the stream untouched."""
+    cfg = get_config(arch, smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    extras = _spec_extras(cfg, 4)
+
+    def run(c):
+        reqs = _prefix_requests(cfg)
+        eng = ServeEngine(c, params, batch_slots=4, max_len=32,
+                          chunk_size=4, extras=extras)
+        eng.run(reqs)
+        return eng, reqs
+
+    base = cfg if layout == "contiguous" else _paged(cfg)
+    _, ref = run(base)
+    eng, got = run(dataclasses.replace(base, prefix_sharing=True))
+    expect = layout == "paged" and arch == "qwen2.5-32b"
+    assert eng.prefix_sharing == expect
+    rep = eng.policy_report()["prefix_sharing"]
+    assert rep["requested"] is True and rep["enabled"] is expect
+    if expect:
+        # All four ride one admission wave: the first request registers,
+        # the other three attach to its (not-yet-prefilled) pages — the
+        # same-wave case, where the suffix rows read K/V the owner's rows
+        # write inside the same dispatch.
+        assert eng.stats["prefix_hits"] == 3
+        assert eng.stats["prefix_tokens_shared"] == 3 * 16
+        assert all(r.prefix_tokens == (0 if i == 0 else 16)
+                   for i, r in enumerate(got))
+    for a, b in zip(ref, got):
+        assert len(b.generated) == b.max_new_tokens
+        assert a.generated == b.generated, (
+            f"{arch}/{layout}: prefix sharing changed the stream"
+        )
+
+
+def test_prefix_cow_divergence():
+    """COW semantics: (B) a prompt that ends exactly at a shared-page
+    boundary re-materializes its last page privately (the seeding logits
+    are never assumed resident), and (C) a prompt diverging mid-page gets
+    a private divergent page — the shared page is never written, so every
+    stream matches its own full-forward reference."""
+    cfg = get_config("qwen2.5-32b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, cfg.vocab, size=16).astype(np.int32)  # 2 pages
+    A = Request(prompt=np.concatenate(
+        [base, rng.integers(0, cfg.vocab, size=4).astype(np.int32)]),
+        max_new_tokens=4)
+    B = Request(prompt=base.copy(), max_new_tokens=8)
+    C = Request(prompt=np.concatenate(
+        [base[:12], rng.integers(0, cfg.vocab, size=6).astype(np.int32)]),
+        max_new_tokens=6)
+    eng = ServeEngine(
+        dataclasses.replace(_paged(cfg), prefix_sharing=True), params,
+        batch_slots=3, max_len=32, chunk_size=2,
+    )
+    eng.run([A, B, C])
+    assert A.prefix_tokens == 0          # first in: registers, shares nothing
+    assert B.prefix_tokens == 8          # capped below its 2-page prompt
+    assert C.prefix_tokens == 8          # page 1 diverges -> only page 0
+    for r, name in ((A, "A"), (B, "B"), (C, "C")):
+        assert r.generated == _greedy_reference(
+            model, params, r.prompt, r.max_new_tokens
+        ), f"{name} diverged under COW"
+    assert sorted(eng.free_pages) == list(range(eng.n_pages))
+    assert len(eng.prefix) == 0
+
+
+def test_prefix_refcount_at_finish():
+    """Regression: the prefix owner finishing first must not free pages a
+    sharer still references — they free (and their trie nodes evict) only
+    when the LAST sharer finishes."""
+    cfg = get_config("qwen2.5-32b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    sys_p = rng.integers(0, cfg.vocab, size=17).astype(np.int32)
+    owner = Request(prompt=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, size=3).astype(np.int32)]),
+        max_new_tokens=1)            # finishes at the admission wave itself
+    sharers = [
+        Request(prompt=np.concatenate(
+            [sys_p, rng.integers(0, cfg.vocab, size=n).astype(np.int32)]),
+            max_new_tokens=6)
+        for n in (4, 2)
+    ]
+    eng = ServeEngine(
+        dataclasses.replace(_paged(cfg), prefix_sharing=True), params,
+        batch_slots=3, max_len=32, chunk_size=2,
+    )
+    eng.submit([owner] + sharers)
+    eng._admit_wave()
+    assert owner.done and not any(s.done for s in sharers)
+    # The two shared pages survive the owner's release at refcount 2.
+    assert len(eng.prefix) == 2
+    shared_pages = eng.prefix.lookup(sys_p[:16])
+    assert [eng.allocator.ref_count(p) for p in shared_pages] == [2, 2]
+    eng.drain()
+    for r in sharers:
+        assert r.generated == _greedy_reference(
+            model, params, r.prompt, r.max_new_tokens
+        )
+    assert sorted(eng.free_pages) == list(range(eng.n_pages))
+    assert len(eng.prefix) == 0
+
+
+def test_prefix_sharing_composes_with_spec():
+    """Prefix sharing under speculative decode: outputs stay identical
+    AND acceptance is preserved — the n-gram history seeds from the full
+    prompt (not just the prefilled suffix), so an attached slot drafts
+    exactly what the unshared engine drafts."""
+    cfg = get_config("qwen2.5-32b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    # A repetitive system prompt the proposer can mine from round one.
+    sys_p = np.tile(rng.integers(0, cfg.vocab, size=4), 5)[:17].astype(
+        np.int32
+    )
+    def run(c):
+        reqs = [
+            Request(prompt=np.concatenate(
+                [sys_p, rng2.integers(0, cfg.vocab, size=n).astype(np.int32)]),
+                max_new_tokens=8)
+            for rng2, n in ((np.random.default_rng(7 + i), 3 + i)
+                            for i in range(4))
+        ]
+        eng = ServeEngine(c, params, batch_slots=4, max_len=32, chunk_size=8)
+        eng.run(reqs)
+        return eng, reqs
+
+    spec_paged = dataclasses.replace(_paged(cfg), spec_k=3, spec_ngram=2)
+    eng_u, ref = run(spec_paged)
+    eng_s, got = run(dataclasses.replace(spec_paged, prefix_sharing=True))
+    assert eng_s.prefix_sharing and eng_s.stats["prefix_hits"] == 3
+    for a, b in zip(ref, got):
+        assert a.generated == b.generated
+    # Same full-prompt history -> same drafts -> identical acceptance.
+    for k in ("draft_proposed", "draft_accepted", "spec_rounds"):
+        assert eng_s.stats[k] == eng_u.stats[k], k
+
+
+def test_prefix_sharing_raises_effective_capacity():
+    """The point of the feature: a pool too small to hold the workload
+    unshared admits EVERY slot in one wave once the system prompt is
+    shared — and still emits the unshared engine's exact streams."""
+    cfg = get_config("qwen2.5-32b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    spec = ((3, 5), (5, 4), (4, 6), (3, 3))   # 4 pages worst-case each
+
+    def run(c):
+        reqs = _prefix_requests(cfg, spec=spec)
+        eng = ServeEngine(c, params, batch_slots=4, max_len=32,
+                          chunk_size=4, n_pages=10)
+        eng.run(reqs)
+        return eng, reqs
+
+    eng_u, ref = run(_paged(cfg))
+    eng_s, got = run(dataclasses.replace(_paged(cfg), prefix_sharing=True))
+    # Unshared: the four requests need 3+4+4+3 = 14 pages > 10 pooled ->
+    # admission serializes behind page frees.
+    assert eng_u.stats["admission_waves"] >= 2
+    assert eng_u.stats["peak_pages_held"] <= 10
+    # Shared: 3 (owner) + 2+2+1 suffix-only pages = 8 <= 10 -> one wave.
+    assert eng_s.stats["admission_waves"] == 1
+    assert eng_s.stats["peak_pages_held"] == 8
+    for a, b in zip(ref, got):
+        assert a.generated == b.generated
+    assert eng_s.serve_stats()["prefix_hit_rate"] == 0.75
+
+
+# ---------------------------------------------------------------------------
 # Speculative decode (DESIGN.md §5.3): draft/verify/rollback must be
 # output-identical to plain chunked decode for every cache family and both
 # KV layouts — the headline invariant of the spec path.
