@@ -26,6 +26,9 @@ figure-specific metrics.
 * ``serve_prefix`` — prefix sharing on the many-slots-one-system-prompt
   workload: effective-capacity multiple (>= 2x asserted), suffix-only
   TTFT cut vs unshared paged, shared-vs-unshared bit-identity asserted
+* ``serve_chaos`` — lifecycle robustness: forced preemptions under an
+  undersized pool and a seeded fault-injected run, both asserted
+  bit-identical to the fault-free run with zero leaked pages
 
 so BENCH_*.json files can track the planning-pipeline and serving perf
 trajectories across PRs.  ``--analytic-only`` skips the measured (jit
@@ -144,9 +147,13 @@ def main(argv=None) -> None:
                 reps=max(1, args.reps)
             )
             _emit(prefix_rows, rows)
+            # Chaos/lifecycle: preemption + seeded fault injection must
+            # stay bit-identical to the fault-free run and leak no pages.
+            chaos_rows, chaos_summary = serve_bench.chaos_rows()
+            _emit(chaos_rows, rows)
             serve_summary = {**serve_summary, **paged_summary,
                              **family_summary, **spec_summary,
-                             **prefix_summary}
+                             **prefix_summary, **chaos_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 

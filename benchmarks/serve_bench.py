@@ -32,12 +32,19 @@ Emitted metrics (also merged into ``benchmarks.run --json`` output):
                              actually held, asserted >= 2x), suffix-only
                              TTFT vs full-prefill TTFT, with shared-vs-
                              unshared bit-identity asserted
+* ``serve_chaos``          — lifecycle robustness (``chaos_rows``): an
+                             undersized pool forcing real preemptions and
+                             a seeded fault-injected run (alloc refusals +
+                             forced preemptions), both asserted
+                             bit-identical to the fault-free run with zero
+                             leaked pages and engine invariants held
 
 ``python -m benchmarks.serve_bench --identity-only`` runs only the
 bit-identity checks (the CI gate) — paged vs contiguous, speculative vs
-plain (greedy + seeded sampling) with the acceptance-rate floor, and
-shared-prefix vs unshared with the >= 2x effective-capacity floor — and
-exits nonzero on any violation.
+plain (greedy + seeded sampling) with the acceptance-rate floor,
+shared-prefix vs unshared with the >= 2x effective-capacity floor, and
+the chaos leg (preemption + injected faults must not change a single
+token and must leak zero pages) — and exits nonzero on any violation.
 """
 from __future__ import annotations
 
@@ -719,6 +726,114 @@ def family_rows(identity_only: bool = False):
     return rows, {"serve_families": summary}
 
 
+# ---------------------------------------------------------------------------
+# Chaos / lifecycle leg: preemption + fault-injection bit-identity
+# ---------------------------------------------------------------------------
+
+CHAOS_SLOTS = 2
+CHAOS_MAX_LEN = 32
+CHAOS_PAGE = 8
+# (prompt_len, max_new_tokens) sized for page 8 / max_len 32: demands are
+# 2/3/2/2 pages, so with a 4-page pool the 3-page request can only admit
+# by evicting a resident — real preemption, not a simulated one.
+CHAOS_SPEC = ((6, 6), (10, 8), (5, 8), (4, 6))
+CHAOS_POOL = 4
+# Seeded so injections actually fire within this workload's handful of
+# allocs (np.random.default_rng(0) draws 0.27/0.04/0.02 early at p=0.4).
+CHAOS_ALLOC_FAIL_P = 0.4
+CHAOS_PREEMPT_P = 0.25
+CHAOS_SEED = 0
+
+
+def _chaos_requests(cfg, seed=17):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                max_new_tokens=m, seed=7)
+        for n, m in CHAOS_SPEC
+    ]
+
+
+def chaos_rows(identity_only: bool = False):
+    """Lifecycle robustness gate (DESIGN.md §5.5), two legs against one
+    fault-free reference run:
+
+    * pressure — a pool smaller than the workload's concurrent footprint
+      forces >= 1 genuine preemption (evict, release pages, re-enqueue,
+      recompute-prefill over prompt + emitted);
+    * chaos — seeded alloc refusals AND forced preemptions perturb the
+      schedule; the engine auto-asserts ``check_invariants()`` after
+      every wave while a chaos knob is armed.
+
+    Both must reproduce the reference streams bit-for-bit and end with
+    the ENTIRE pool back on the free list (zero leaked pages) — restore
+    correctness is recomputed from host-side truth, so any divergence is
+    a lifecycle bug, not noise."""
+    cfg = dataclasses.replace(
+        get_config(SERVE_ARCH, smoke=True),
+        cache_layout="paged", kv_page_size=CHAOS_PAGE,
+    )
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    def run(c, n_pages=None):
+        eng = ServeEngine(c, params, batch_slots=CHAOS_SLOTS,
+                          max_len=CHAOS_MAX_LEN, chunk_size=4,
+                          n_pages=n_pages)
+        reqs = _chaos_requests(c)
+        eng.run(reqs)
+        return eng, reqs
+
+    ref_eng, ref = run(cfg)                    # ample pool: no eviction
+    assert ref_eng.stats["preempted"] == 0
+
+    def check(tag, eng, reqs):
+        bad = [i for i, (a, b) in enumerate(zip(reqs, ref))
+               if a.generated != b.generated]
+        assert not bad, (
+            f"serve bit-identity violated on {tag} leg for request(s) "
+            f"{bad}: fault paths changed emitted tokens"
+        )
+        leaked = eng.n_pages - len(eng.free_pages)
+        assert leaked == 0, f"{tag} leg leaked {leaked} page(s)"
+        eng.check_invariants()
+
+    press_eng, pressed = run(cfg, n_pages=CHAOS_POOL)
+    assert press_eng.stats["preempted"] >= 1, "pressure leg never evicted"
+    check("pressure", press_eng, pressed)
+
+    chaos_cfg = dataclasses.replace(
+        cfg, chaos_alloc_fail_p=CHAOS_ALLOC_FAIL_P,
+        chaos_preempt_p=CHAOS_PREEMPT_P, chaos_seed=CHAOS_SEED,
+    )
+    chaos_eng, chaotic = run(chaos_cfg, n_pages=CHAOS_POOL)
+    life = chaos_eng.policy_report()["lifecycle"]
+    assert life["chaos"]["injected_alloc_failures"] >= 1, "chaos never fired"
+    check("chaos", chaos_eng, chaotic)
+
+    rows = [{
+        "name": "serve/chaos",
+        "preempted_pressure": press_eng.stats["preempted"],
+        "recompute_tokens_pressure": press_eng.stats["recompute_tokens"],
+        "preempted_chaos": chaos_eng.stats["preempted"],
+        "preempted_forced_chaos": chaos_eng.stats["preempted_forced"],
+        "injected_alloc_failures": life["chaos"]["injected_alloc_failures"],
+        "recompute_tokens_chaos": chaos_eng.stats["recompute_tokens"],
+        "leaked_pages": 0,
+        "goodput_under_deadline": life["goodput_under_deadline"],
+        "bit_identical": True,
+    }]
+    if identity_only:
+        print(
+            "chaos: bit-identical under preemption + injected faults "
+            f"(pressure preemptions={rows[0]['preempted_pressure']}, "
+            f"injected alloc failures={rows[0]['injected_alloc_failures']}, "
+            f"forced preemptions={rows[0]['preempted_forced_chaos']}, "
+            "leaked pages=0)"
+        )
+    return rows, {"serve_chaos": {k: v for k, v in rows[0].items()
+                                  if k != "name"}}
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -728,15 +843,18 @@ if __name__ == "__main__":
                     help="run only the bit-identity checks — paged vs "
                          "contiguous, speculative vs plain (greedy + "
                          "seeded sampling) with the spec acceptance floor, "
-                         "and shared-prefix vs unshared with the effective-"
-                         "capacity floor (CI gate); nonzero exit on any "
-                         "violation")
+                         "shared-prefix vs unshared with the effective-"
+                         "capacity floor, and the chaos leg (preemption + "
+                         "seeded fault injection must not change a token "
+                         "and must leak zero pages) (CI gate); nonzero "
+                         "exit on any violation")
     args = ap.parse_args()
     if args.identity_only:
         family_rows(identity_only=True)
         paged_rows(reps=1, warm=False)
         spec_rows(identity_only=True)
         prefix_rows(identity_only=True)
+        chaos_rows(identity_only=True)
         print("serve bit-identity: PASS")
     else:
         rows, summary = serve_rows()
@@ -744,9 +862,11 @@ if __name__ == "__main__":
         frows, fsummary = family_rows()
         srows, ssummary = spec_rows()
         xrows, xsummary = prefix_rows()
-        for r in rows + prows + frows + srows + xrows:
+        crows, csummary = chaos_rows()
+        for r in rows + prows + frows + srows + xrows + crows:
             print(r)
         print(json.dumps(
-            {**summary, **psummary, **fsummary, **ssummary, **xsummary},
+            {**summary, **psummary, **fsummary, **ssummary, **xsummary,
+             **csummary},
             indent=1,
         ))

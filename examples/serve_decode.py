@@ -21,8 +21,16 @@ the paged pool with prefix sharing on and off: attached requests ride the
 resident system-prompt pages (refcounted; prefilled once) and the shared
 engine holds far fewer pages at its peak, with identical outputs.
 
+``--deadline-s S`` attaches a per-request deadline to a long-budget wave:
+requests that blow it are expired mid-stream (partial tokens kept, slot
+and pages freed) and counted against goodput-under-deadline.
+
+``--cancel`` cancels one resident request mid-stream after the first
+decode chunk: the engine retires it at the next chunk boundary, keeps the
+tokens already emitted, and the rest of the wave is unaffected.
+
 Run:  PYTHONPATH=src python examples/serve_decode.py
-          [--paged] [--spec] [--shared-prefix]
+          [--paged] [--spec] [--shared-prefix] [--deadline-s S] [--cancel]
 """
 import dataclasses
 import sys
@@ -154,6 +162,36 @@ def main():
               f"{stats['spec_tokens_per_round']:.2f} tokens/round")
         assert all(a.generated == b.generated for a, b in zip(reqs, sreqs))
         print("speculative == plain: True")
+
+    deadline = None
+    if "--deadline-s" in sys.argv:
+        deadline = float(sys.argv[sys.argv.index("--deadline-s") + 1])
+    if deadline is not None or "--cancel" in sys.argv:
+        # Lifecycle demo (DESIGN.md §5.5): submit/step/cancel/drain by
+        # hand instead of run(), since cancellation is a mid-stream act.
+        lrng = np.random.default_rng(5)
+        lreqs = [
+            Request(prompt=lrng.integers(0, cfg.vocab, size=n)
+                    .astype(np.int32),
+                    max_new_tokens=24, deadline_s=deadline, id=f"demo-{i}")
+            for i, n in enumerate((5, 8, 3, 6))
+        ]
+        leng = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                           chunk_size=4)
+        leng.submit(lreqs)
+        leng.step()                        # admit first wave + one chunk
+        if "--cancel" in sys.argv:
+            victim = next(r for r in lreqs if r.status == "resident")
+            assert leng.cancel(victim.id)
+            print(f"cancel({victim.id}) requested mid-stream "
+                  f"({len(victim.generated)} tokens emitted so far)")
+        leng.drain()
+        print("lifecycle:", {r.id: f"{r.status}[{len(r.generated)}]"
+                             for r in lreqs})
+        print(f"cancelled={leng.stats['cancelled']} "
+              f"expired={leng.stats['expired']} "
+              "goodput_under_deadline="
+              f"{leng.serve_stats()['goodput_under_deadline']:.2f}")
 
 
 if __name__ == "__main__":

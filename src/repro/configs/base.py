@@ -67,6 +67,17 @@ class ModelConfig:
     temperature: float = 1.0
     top_k: int = 0                     # "top_k" mode: sample from k largest
     top_p: float = 1.0                 # "top_p" mode: smallest mass >= top_p
+    # Request lifecycle (serving, DESIGN.md §5.5): when admission is gated
+    # on an empty free list, evict the youngest resident and re-enqueue it
+    # for recompute-prefill over prompt + emitted tokens (bit-identical
+    # restore by construction of the (seed, token-index) sampler keys).
+    preemption: bool = True
+    # Chaos / fault injection (serve.chaos, DESIGN.md §5.5): seeded alloc
+    # failures (paged only) and forced preemptions at wave boundaries.
+    # Probabilities must stay < 1.0 or the serve loop cannot make progress.
+    chaos_alloc_fail_p: float = 0.0    # P(injected alloc refusal) per alloc
+    chaos_preempt_p: float = 0.0       # P(forced preemption) per wave
+    chaos_seed: int = 0                # seeds both chaos RNGs
     # Numerics / sharding
     dtype: str = "bfloat16"
     vocab_pad_multiple: int = 2048   # pad vocab so `model` axis (16) divides it

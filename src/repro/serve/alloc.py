@@ -1,0 +1,106 @@
+"""Refcounted host-side page allocator for the paged KV pool.
+
+Extracted from ``serve.engine`` so the chaos/fault-injection wrapper
+(`serve.chaos.ChaosAllocator`) can subclass it without a circular import;
+``serve.engine`` re-exports ``PageAllocator`` for compatibility (the
+property suite and older call sites import it from there).
+"""
+from __future__ import annotations
+
+
+class PageAllocator:
+    """Refcounted host-side LIFO free-list over a fixed page pool
+    (DESIGN.md §5.2, refcounts §5.4).
+
+    Every held page carries a reference count: ``alloc`` hands out pages
+    at refcount 1, ``share`` adds a reference to already-held pages (a new
+    slot's page table aliasing a resident prefix page), and ``release``
+    drops one — a page returns to the free list only at refcount zero, so
+    a shared prefix page survives its original owner finishing.
+
+    Invariants (property-tested in ``tests/test_alloc_property.py``,
+    including a hypothesis state machine over alloc/share/release
+    interleavings):
+
+    * a page is never handed out twice without an intervening final
+      ``release``,
+    * ``alloc`` is atomic and never over-commits — when ``n`` exceeds the
+      free count it returns None having popped nothing (admission
+      gating; the guard predates refcounting but was untested, and is
+      now pinned by a regression test),
+    * no page is freed while references remain, and references are
+      conserved across share/release interleavings,
+    * held + free is a partition of the pool at all times (no leaks).
+    """
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 0
+        self.n_pages = n_pages
+        self._free = list(range(n_pages))
+        self._refs: dict[int, int] = {}
+
+    @property
+    def free_pages(self) -> list[int]:
+        return list(self._free)
+
+    @property
+    def held_pages(self) -> set[int]:
+        return set(self._refs)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def ref_count(self, page: int) -> int:
+        """Current reference count of ``page`` (0 if free)."""
+        return self._refs.get(page, 0)
+
+    def total_refs(self) -> int:
+        return sum(self._refs.values())
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages (LIFO) at refcount 1, or None — having popped
+        NOTHING — if the pool can't cover all ``n`` (atomic failure)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        assert not any(i in self._refs for i in ids), "double-allocated page"
+        for i in ids:
+            self._refs[i] = 1
+        return ids
+
+    def share(self, ids) -> None:
+        """Add one reference to each held page in ``ids`` (a new sharer's
+        page table now aliases them).  Sharing a free page is a bug."""
+        ids = list(ids)
+        assert len(ids) == len(set(ids)), (
+            f"duplicate page ids in share(): {ids}"
+        )
+        bad = [i for i in ids if i not in self._refs]
+        assert not bad, f"sharing pages not held: {bad}"
+        for i in ids:
+            self._refs[i] += 1
+
+    def release(self, ids) -> list[int]:
+        """Drop one reference per page; pages reaching refcount zero
+        return to the free list.  Returns the ids actually freed (the
+        engine evicts their trie nodes)."""
+        ids = list(ids)
+        assert len(ids) == len(set(ids)), (
+            f"duplicate page ids in free(): {ids}"
+        )
+        bad = [i for i in ids if i not in self._refs]
+        assert not bad, f"freeing pages not held: {bad}"
+        freed = []
+        for i in ids:
+            self._refs[i] -= 1
+            if self._refs[i] == 0:
+                del self._refs[i]
+                self._free.append(i)
+                freed.append(i)
+        return freed
+
+    # Unshared call sites (and the pre-refcount test suite) say "free":
+    # with every refcount at 1 release IS free.
+    free = release

@@ -1,0 +1,53 @@
+"""Fault injection for the serve tier (DESIGN.md §5.5).
+
+Robustness of the engine's lifecycle state machine is only credible if
+the failure paths actually run.  This module makes them run on demand:
+
+* ``ChaosAllocator`` — a ``PageAllocator`` that, with seeded probability
+  ``fail_p``, refuses an otherwise-satisfiable ``alloc``.  An injected
+  failure is indistinguishable from genuine pool exhaustion to the
+  engine, so it exercises the same gating/preemption/retry paths, while
+  staying atomic (nothing popped, nothing referenced) and fully
+  reproducible from the seed.
+* forced preemptions — the engine consults ``cfg.chaos_preempt_p`` at
+  wave boundaries and preempts a healthy resident (see
+  ``ServeEngine._admit_wave``); that logic lives in the engine, this
+  module only supplies the seeded RNG convention.
+
+Because every drop of state an injected fault perturbs is recomputed
+from host-side truth (tokens, refcounts, page tables), a chaos run must
+stay BIT-IDENTICAL to the fault-free run and end with zero leaked
+pages — that is the acceptance gate in tests and the CI chaos leg.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.alloc import PageAllocator
+
+
+class ChaosAllocator(PageAllocator):
+    """``PageAllocator`` with seeded, probabilistic alloc failures.
+
+    Only positive-size allocations can fail (``alloc(0)`` is a no-op the
+    engine uses for fully-shared prefixes; failing it would fabricate a
+    gating state the real allocator can never produce).  ``last_injected``
+    lets tests distinguish an injected refusal from a genuine
+    out-of-pages refusal on the immediately preceding call.
+    """
+
+    def __init__(self, n_pages: int, fail_p: float, seed: int = 0):
+        super().__init__(n_pages)
+        assert 0.0 <= fail_p <= 1.0, fail_p
+        self.fail_p = fail_p
+        self._rng = np.random.default_rng(seed)
+        self.injected_failures = 0
+        self.last_injected = False
+
+    def alloc(self, n: int) -> list[int] | None:
+        self.last_injected = False
+        if n > 0 and self.fail_p > 0.0 and self._rng.random() < self.fail_p:
+            self.injected_failures += 1
+            self.last_injected = True
+            return None
+        return super().alloc(n)

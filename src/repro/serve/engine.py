@@ -53,6 +53,20 @@ loop, not the policy search, is the artifact that must be fast):
 * **Sampling** (`serve.sampling.Sampler`) — greedy / temperature / top-k
   / top-p on device inside the chunk scan; per-request seeds fold into
   per-token keys so streams are independent of slot assignment order.
+* **Request lifecycle** (DESIGN.md §5.5) — requests move through
+  queued -> resident -> {finished, preempted -> re-queued, cancelled,
+  expired}.  When paged admission is gated on an empty free list the
+  engine *preempts* the youngest resident: its pages are released
+  refcount-aware (prefix-shared pages are only dereferenced, never freed
+  under sharers), its emitted tokens are already host-side, and it
+  re-enqueues for a recompute-prefill over prompt + emitted — the
+  `(seed, token index)` sampler keys make the restored stream
+  bit-identical to the uninterrupted one by construction.  `cancel()`
+  and per-request deadlines are swept between decode chunks (slots,
+  pages and trie refs free mid-stream), submission is bounded with
+  reject-with-reason backpressure (`AdmissionReject`), and
+  `check_invariants()` + `serve.chaos` fault injection prove the
+  allocator/trie/engine state machine survives all of it.
 """
 from __future__ import annotations
 
@@ -71,6 +85,10 @@ from repro.core import CachePolicyEngine, make_engine
 from repro.core.characterize import attention_op
 from repro.models import build_model
 from repro.models.common import paged_kv_spec
+from repro.serve.alloc import PageAllocator  # noqa: F401  (re-export: the
+# allocator lives in serve.alloc since the chaos wrapper subclasses it;
+# property tests and older call sites import it from here)
+from repro.serve.chaos import ChaosAllocator
 from repro.serve.draft import ngram_propose
 from repro.serve.prefix import PrefixIndex
 from repro.serve.sampling import (  # noqa: F401  (greedy_sample re-export)
@@ -87,15 +105,47 @@ class Request:
     seed: int | None = None       # per-request sampling seed (None -> 0):
                                   # streams depend on (seed, token index)
                                   # only, never on slot assignment order
+    id: str | None = None         # cancellation handle; auto-assigned at
+                                  # submit when None ("req-<n>")
+    deadline_s: float | None = None       # submit -> finish SLO; a resident
+                                          # request past it is expired
+                                          # mid-stream at the next sweep
+    max_queue_wait_s: float | None = None  # submit -> admission bound
+                                           # (queued requests only)
     generated: list = dataclasses.field(default_factory=list)
     slot: int = -1
-    done: bool = False
+    done: bool = False            # terminal: finished, cancelled or expired
+                                  # (``status`` says which)
+    status: str = "new"           # new -> queued -> resident -> {finished,
+                                  # preempted (re-queued), cancelled, expired}
+    cancel_requested: bool = False  # set by engine.cancel(); honored at the
+                                    # next lifecycle sweep (chunk boundary)
+    preempted_n: int = 0          # times evicted mid-stream; natural
+                                  # preemption only ever victimizes
+                                  # never-preempted residents, so it is
+                                  # bounded by the request count
+    admit_seq: int = -1           # admission order; the preemption victim
+                                  # is the youngest (max) resident
     prefix_tokens: int = 0        # prompt tokens attached from shared pages
                                   # at admission (0 = fully prefilled)
     ttft_s: float | None = None        # admission -> first token (prefill)
-    queue_wait_s: float | None = None  # submit -> admission (queueing only)
+    queue_wait_s: float | None = None  # submit -> FIRST admission (queueing
+                                       # only; preemption re-queues don't
+                                       # overwrite it)
     submit_t: float | None = None
     admit_t: float | None = None
+
+
+class AdmissionReject(ValueError):
+    """A request the engine refuses to enqueue, with a machine-readable
+    ``reason``: backpressure ("queue_full") or a request that could never
+    be served ("pool_too_small", "max_len", "empty_prompt", "zero_budget",
+    "duplicate_id").  Raised by ``submit`` BEFORE anything in the batch is
+    enqueued, so a rejection never leaves the batch half-submitted."""
+
+    def __init__(self, reason: str, message: str):
+        super().__init__(message)
+        self.reason = reason
 
 
 def _pad_bucket(n: int, cap: int) -> int:
@@ -105,104 +155,6 @@ def _pad_bucket(n: int, cap: int) -> int:
     while b < n:
         b *= 2
     return min(b, cap)
-
-
-class PageAllocator:
-    """Refcounted host-side LIFO free-list over a fixed page pool
-    (DESIGN.md §5.2, refcounts §5.4).
-
-    Every held page carries a reference count: ``alloc`` hands out pages
-    at refcount 1, ``share`` adds a reference to already-held pages (a new
-    slot's page table aliasing a resident prefix page), and ``release``
-    drops one — a page returns to the free list only at refcount zero, so
-    a shared prefix page survives its original owner finishing.
-
-    Invariants (property-tested in ``tests/test_alloc_property.py``,
-    including a hypothesis state machine over alloc/share/release
-    interleavings):
-
-    * a page is never handed out twice without an intervening final
-      ``release``,
-    * ``alloc`` is atomic and never over-commits — when ``n`` exceeds the
-      free count it returns None having popped nothing (admission
-      gating; the guard predates refcounting but was untested, and is
-      now pinned by a regression test),
-    * no page is freed while references remain, and references are
-      conserved across share/release interleavings,
-    * held + free is a partition of the pool at all times (no leaks).
-    """
-
-    def __init__(self, n_pages: int):
-        assert n_pages >= 0
-        self.n_pages = n_pages
-        self._free = list(range(n_pages))
-        self._refs: dict[int, int] = {}
-
-    @property
-    def free_pages(self) -> list[int]:
-        return list(self._free)
-
-    @property
-    def held_pages(self) -> set[int]:
-        return set(self._refs)
-
-    def free_count(self) -> int:
-        return len(self._free)
-
-    def ref_count(self, page: int) -> int:
-        """Current reference count of ``page`` (0 if free)."""
-        return self._refs.get(page, 0)
-
-    def total_refs(self) -> int:
-        return sum(self._refs.values())
-
-    def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages (LIFO) at refcount 1, or None — having popped
-        NOTHING — if the pool can't cover all ``n`` (atomic failure)."""
-        if n < 0:
-            raise ValueError(f"alloc({n})")
-        if n > len(self._free):
-            return None
-        ids = [self._free.pop() for _ in range(n)]
-        assert not any(i in self._refs for i in ids), "double-allocated page"
-        for i in ids:
-            self._refs[i] = 1
-        return ids
-
-    def share(self, ids) -> None:
-        """Add one reference to each held page in ``ids`` (a new sharer's
-        page table now aliases them).  Sharing a free page is a bug."""
-        ids = list(ids)
-        assert len(ids) == len(set(ids)), (
-            f"duplicate page ids in share(): {ids}"
-        )
-        bad = [i for i in ids if i not in self._refs]
-        assert not bad, f"sharing pages not held: {bad}"
-        for i in ids:
-            self._refs[i] += 1
-
-    def release(self, ids) -> list[int]:
-        """Drop one reference per page; pages reaching refcount zero
-        return to the free list.  Returns the ids actually freed (the
-        engine evicts their trie nodes)."""
-        ids = list(ids)
-        assert len(ids) == len(set(ids)), (
-            f"duplicate page ids in free(): {ids}"
-        )
-        bad = [i for i in ids if i not in self._refs]
-        assert not bad, f"freeing pages not held: {bad}"
-        freed = []
-        for i in ids:
-            self._refs[i] -= 1
-            if self._refs[i] == 0:
-                del self._refs[i]
-                self._free.append(i)
-                freed.append(i)
-        return freed
-
-    # Unshared call sites (and the pre-refcount test suite) say "free":
-    # with every refcount at 1 release IS free.
-    free = release
 
 
 class ServeEngine:
@@ -218,7 +170,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
                  max_len: int, extras: dict[str, Any] | None = None,
                  policy_engine: CachePolicyEngine | None = None,
-                 chunk_size: int = 8, n_pages: int | None = None):
+                 chunk_size: int = 8, n_pages: int | None = None,
+                 max_queue: int | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -253,7 +206,20 @@ class ServeEngine:
             self.pages_per_slot, self.n_pages = paged_kv_spec(
                 batch_slots, max_len, psz, n_pages
             )
-            self.allocator = PageAllocator(self.n_pages)
+            # Chaos fault injection (DESIGN.md §5.5): with
+            # cfg.chaos_alloc_fail_p > 0 the pool refuses otherwise-
+            # satisfiable allocations with seeded probability, driving the
+            # same gating/preemption paths genuine exhaustion would.
+            if cfg.chaos_alloc_fail_p > 0.0:
+                assert cfg.chaos_alloc_fail_p < 1.0, (
+                    "chaos_alloc_fail_p must be < 1.0 or admission can "
+                    "never succeed"
+                )
+                self.allocator: PageAllocator = ChaosAllocator(
+                    self.n_pages, cfg.chaos_alloc_fail_p, cfg.chaos_seed
+                )
+            else:
+                self.allocator = PageAllocator(self.n_pages)
             self.page_table = np.full(
                 (batch_slots, self.pages_per_slot), -1, np.int32
             )
@@ -306,7 +272,7 @@ class ServeEngine:
         self._spec_replay = "ssm" in self.cache or "conv" in self.cache
         self._reset_slots = self.model.reset_slots
         self._prefill = jax.jit(
-            self._prefill_fn, donate_argnums=(1, 6, 7, 9, 10, 11, 13)
+            self._prefill_fn, donate_argnums=(1, 6, 7, 10, 11, 12, 14)
         )
         self._decode_chunk = jax.jit(
             self._spec_chunk_fn if self.spec else self._chunk_fn,
@@ -325,6 +291,30 @@ class ServeEngine:
         self.hist_len = jnp.zeros((batch_slots,), jnp.int32)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.queue: collections.deque[Request] = collections.deque()
+        # Request lifecycle (DESIGN.md §5.5).
+        self.preemption = bool(cfg.preemption)
+        self.max_queue = max_queue          # None = unbounded submission
+        self._by_id: dict[str, Request] = {}   # cancellation handles
+        self._next_id = 0
+        self._admit_seq = 0                 # victim choice: youngest = max
+        # Slots vacated mid-stream (preempt/cancel/expire) whose device
+        # budget must be zeroed before the next decode chunk — a stale
+        # ``remaining`` would decode into pages now owned by others.
+        self._dirty_slots: set[int] = set()
+        if cfg.chaos_preempt_p > 0.0:
+            assert cfg.chaos_preempt_p < 1.0, (
+                "chaos_preempt_p must be < 1.0 or the loop preempts forever"
+            )
+        self._chaos_rng = (
+            np.random.default_rng(cfg.chaos_seed)
+            if cfg.chaos_preempt_p > 0.0 else None
+        )
+        # Any chaos knob arms the per-wave invariant check: fault paths
+        # must leave allocator/trie/page-table state exactly conserved.
+        self._chaos = (
+            cfg.chaos_preempt_p > 0.0
+            or (self.paged and cfg.chaos_alloc_fail_p > 0.0)
+        )
         self.stats = {
             "host_syncs": 0,          # total device->host barriers
             "decode_syncs": 0,        # one per decode chunk
@@ -339,6 +329,14 @@ class ServeEngine:
             "prefix_pages_shared": 0,  # shared-page references taken
             "prefix_tokens_shared": 0,  # prompt tokens not re-prefilled
             "peak_pages_held": 0,     # max concurrent pool usage (paged)
+            "preempted": 0,           # mid-stream evictions (incl. forced)
+            "preempted_forced": 0,    # chaos-forced subset
+            "recompute_tokens": 0,    # emitted tokens re-prefilled at restore
+            "cancelled": 0,           # terminal via engine.cancel()
+            "expired": 0,             # terminal via deadline/queue-wait
+            "rejected": 0,            # submissions refused (AdmissionReject)
+            "deadline_total": 0,      # deadlined requests reaching terminal
+            "deadline_met": 0,        # ... that finished within deadline
         }
 
     # -- policy ------------------------------------------------------------
@@ -404,6 +402,29 @@ class ServeEngine:
                 "trie_nodes": len(self.prefix),
                 "resident_prefix_tokens": self.prefix.resident_tokens(),
             })
+        # Lifecycle / robustness (DESIGN.md §5.5).  Schema is stable —
+        # benches and CI parse it; tests pin the full key set.
+        report["lifecycle"] = {
+            "preemption_enabled": self.preemption,
+            "max_queue": self.max_queue,
+            "preempted": self.stats["preempted"],
+            "preempted_forced": self.stats["preempted_forced"],
+            "recompute_tokens": self.stats["recompute_tokens"],
+            "cancelled": self.stats["cancelled"],
+            "expired": self.stats["expired"],
+            "rejected": self.stats["rejected"],
+            "goodput_under_deadline": self._goodput(),
+            "chaos": {
+                "alloc_fail_p": self.cfg.chaos_alloc_fail_p,
+                "preempt_p": self.cfg.chaos_preempt_p,
+                "seed": self.cfg.chaos_seed,
+                "injected_alloc_failures": (
+                    self.allocator.injected_failures
+                    if self.paged
+                    and isinstance(self.allocator, ChaosAllocator) else 0
+                ),
+            },
+        }
         if self.decode_plan is not None:
             report["decode_attention"] = {
                 "assignment": {
@@ -439,7 +460,15 @@ class ServeEngine:
             out["prefix_hits"] / out["prefill_tokens"]
             if out["prefill_tokens"] else 0.0
         )
+        out["goodput_under_deadline"] = self._goodput()
         return out
+
+    def _goodput(self) -> float:
+        """Fraction of deadlined requests that reached terminal state
+        within their deadline; 1.0 when no request carried one (an
+        SLO-free run is vacuously good)."""
+        total = self.stats["deadline_total"]
+        return self.stats["deadline_met"] / total if total else 1.0
 
     # -- device-side step functions (jitted once) --------------------------
 
@@ -459,8 +488,8 @@ class ServeEngine:
                        else jnp.arange(b), positions].set(tokens, mode="drop")
 
     def _prefill_fn(self, params, cache, tokens, seg_lens, start_lens,
-                    hist_toks, cur_tok, remaining, new_remaining, tok_idx,
-                    hist, hist_len, new_seeds, seeds):
+                    hist_toks, cur_tok, remaining, new_remaining,
+                    new_tok_idx, tok_idx, hist, hist_len, new_seeds, seeds):
         """Ragged admission prefill: reset re-admitted slots, prefill their
         prompts (seg_lens == 0 parks continuing slots), sample each admitted
         slot's first token on device, and (re)seed the slot's history /
@@ -472,7 +501,14 @@ class ServeEngine:
         unshared suffix, positioned (RoPE and scatter) at start + i.
         ``hist_toks`` always carries the FULL prompt, so the n-gram history
         an attached slot's drafts mine is identical to the unshared
-        engine's (the full prompt length is start + seg — no extra arg)."""
+        engine's (the full prompt length is start + seg — no extra arg).
+
+        ``new_tok_idx`` is the stream index of the token this prefill
+        samples: 0 for a fresh admission, m for a preempted request being
+        restored with m tokens already emitted (its "prompt" is then
+        prompt + emitted, and the sampler key for index m reproduces
+        exactly the token the uninterrupted run emitted there — the whole
+        bit-identical-restore argument, DESIGN.md §5.5)."""
         b, pad = tokens.shape
         fpad = hist_toks.shape[1]
         H = hist.shape[1]
@@ -486,12 +522,11 @@ class ServeEngine:
         logits, cache = self.model.prefill(
             params, cache, tokens, seg_lens=seg_lens
         )
-        # The first token of a request is token index 0 of its stream.
-        nxt = self._sample(logits, new_seeds, jnp.zeros((b,), jnp.int32))
+        nxt = self._sample(logits, new_seeds, new_tok_idx)
         cur_tok = jnp.where(admitted, nxt, cur_tok)
         remaining = jnp.where(admitted, new_remaining, remaining)
         seeds = jnp.where(admitted, new_seeds, seeds)
-        tok_idx = jnp.where(admitted, 1, tok_idx)
+        tok_idx = jnp.where(admitted, new_tok_idx + 1, tok_idx)
         # History: full-prompt rows land at 0..full-1, the first token at
         # full; parked slots redirect to H and drop.
         full_seg = start_lens + seg_lens
@@ -641,10 +676,24 @@ class ServeEngine:
     def _pages_needed(self, r: Request) -> int:
         return -(-self._positions_needed(r) // self.page_size)
 
-    def _shared_prefix(self, r: Request, chunks) -> tuple[list[int], int]:
-        """(pages, tokens): the longest resident full-page prefix of
-        ``r.prompt`` (pre-chunked into ``chunks``) this request can attach
-        to (DESIGN.md §5.4).
+    def _effective_prompt(self, r: Request) -> np.ndarray:
+        """The token stream admission must prefill: the prompt — plus, for
+        a preempted request being restored, every token it had already
+        emitted (including the last: its prefill logits are what sample
+        the restored stream's next token, see ``_prefill_fn``).  Its
+        worst-case positions equal the original's (prompt + budget - 1),
+        so ``_positions_needed``/``_pages_needed`` need no restore case."""
+        if not r.generated:
+            return np.asarray(r.prompt, np.int32)
+        return np.concatenate([
+            np.asarray(r.prompt, np.int32),
+            np.asarray(r.generated, np.int32),
+        ])
+
+    def _shared_prefix(self, eff: np.ndarray, chunks) -> tuple[list[int], int]:
+        """(pages, tokens): the longest resident full-page prefix of the
+        effective prompt ``eff`` (pre-chunked into ``chunks``) this
+        request can attach to (DESIGN.md §5.4).
 
         Capped below the prompt's full-page count so the prompt's last
         token is ALWAYS re-prefilled: the logits seeding decode are
@@ -653,10 +702,14 @@ class ServeEngine:
         forever.  The cap also makes the COW case concrete: a prompt
         ending exactly at a shared-page boundary re-materializes that last
         page's K/V into a private page (same bytes, private residency)."""
-        pages = self.prefix.lookup(r.prompt, chunks=chunks)
-        cap = (len(r.prompt) - 1) // self.page_size
+        pages = self.prefix.lookup(eff, chunks=chunks)
+        cap = (len(eff) - 1) // self.page_size
         pages = pages[:cap]
         return pages, len(pages) * self.page_size
+
+    def _reject(self, reason: str, message: str, n: int = 1):
+        self.stats["rejected"] += n
+        raise AdmissionReject(reason, message)
 
     def submit(self, requests: list[Request]) -> None:
         # Validate the whole batch before enqueuing any of it, so a
@@ -666,89 +719,272 @@ class ServeEngine:
                 # Admission always emits the prefill-sampled first token, so
                 # a zero budget would generate one token anyway — reject
                 # instead of silently over-generating.
-                raise ValueError(
+                self._reject("zero_budget", (
                     f"max_new_tokens must be >= 1, got {r.max_new_tokens} "
                     "(prefill emits the first token at admission)"
-                )
-            assert len(r.prompt) > 0, (
-                "empty prompt: seg_lens==0 marks a parked slot, so a "
-                "zero-length admission would never start decoding"
-            )
+                ))
+            if len(r.prompt) == 0:
+                self._reject("empty_prompt", (
+                    "empty prompt: seg_lens==0 marks a parked slot, so a "
+                    "zero-length admission would never start decoding"
+                ))
             need = self._positions_needed(r)
-            assert need <= self.max_len, (
-                f"request needs {need} cache positions, max_len={self.max_len}"
-            )
-            if self.paged:
-                assert self._pages_needed(r) <= self.n_pages, (
-                    f"request needs {self._pages_needed(r)} pages, pool has "
-                    f"{self.n_pages} — it could never be admitted"
-                )
+            if need > self.max_len:
+                self._reject("max_len", (
+                    f"request needs {need} cache positions, "
+                    f"max_len={self.max_len}"
+                ))
+            if self.paged and self._pages_needed(r) > self.n_pages:
+                # An over-pool request can NEVER be admitted; under the
+                # FIFO head-of-line gate it would queue forever and wedge
+                # everything behind it — reject at submit instead.
+                self._reject("pool_too_small", (
+                    f"request needs {self._pages_needed(r)} pages, pool "
+                    f"has {self.n_pages} — it could never be admitted and "
+                    "would block the FIFO queue forever"
+                ))
+            if r.id is not None:
+                # Identity check, not ==: dataclass equality on array
+                # fields is both wrong and throwing.
+                prev = self._by_id.get(r.id)
+                if prev is not None and prev is not r:
+                    self._reject("duplicate_id", (
+                        f"request id {r.id!r} already submitted to "
+                        "this engine"
+                    ))
+        if (self.max_queue is not None
+                and len(self.queue) + len(requests) > self.max_queue):
+            # Backpressure: the bounded queue rejects the WHOLE batch with
+            # a machine-readable reason; the caller retries after a drain.
+            self._reject("queue_full", (
+                f"submitting {len(requests)} request(s) would exceed "
+                f"max_queue={self.max_queue} ({len(self.queue)} queued)"
+            ), n=len(requests))
         now = time.perf_counter()
         for r in requests:
+            if r.id is None:
+                r.id = f"req-{self._next_id}"
+                self._next_id += 1
+            self._by_id[r.id] = r
             r.submit_t = now
+            r.status = "queued"
             self.queue.append(r)
+
+    def cancel(self, request_id: str) -> bool:
+        """Request cancellation of a queued or resident request.  Takes
+        effect at the next lifecycle sweep (a chunk boundary): the slot,
+        pages and trie refs free mid-stream, ``generated`` keeps whatever
+        was emitted.  Returns False for unknown or already-terminal ids
+        (cancellation raced completion) — never raises."""
+        r = self._by_id.get(request_id)
+        if r is None or r.done:
+            return False
+        r.cancel_requested = True
+        return True
 
     def _live(self) -> list[tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
 
-    def _finish(self, r: Request) -> None:
-        r.done = True
-        self.slot_req[r.slot] = None
+    def _release_slot(self, r: Request) -> None:
+        """Vacate ``r``'s slot host-side (finish, preempt, cancel, expire).
+        Drops the slot's page references — pages shared with live slots
+        survive (refcount > 0); pages reaching zero return to the pool and
+        their trie nodes evict.  The device page table is refreshed lazily
+        at the next admission wave; until then the stale row is harmless —
+        the parked slot neither writes KV (seg_lens == 0 drops the
+        scatter) nor has its output read.  The slot lands in
+        ``_dirty_slots`` so its device budget is zeroed before the next
+        chunk (moot for natural finishes, where it already hit zero)."""
+        slot = r.slot
+        assert slot >= 0 and self.slot_req[slot] is r
+        self.slot_req[slot] = None
+        r.slot = -1
+        r.__dict__.pop("_prefix_chunks", None)
         if self.paged:
-            # Drop the slot's references.  Pages shared with live slots
-            # survive (refcount > 0); pages reaching zero return to the
-            # pool and their trie nodes evict.  The device page table is
-            # refreshed lazily at the next admission wave; until then the
-            # stale row is harmless — the parked slot neither writes KV
-            # (seg_lens == 0 drops the scatter) nor has its output read.
-            freed = self.allocator.release(self._slot_pages[r.slot])
+            freed = self.allocator.release(self._slot_pages[slot])
             if self.prefix is not None and freed:
                 self.prefix.evict(freed)
-            self._slot_pages[r.slot] = []
-            self.page_table[r.slot] = -1
+            self._slot_pages[slot] = []
+            self.page_table[slot] = -1
+        self._dirty_slots.add(slot)
 
-    def _admit_wave(self) -> None:
-        free = [i for i, r in enumerate(self.slot_req) if r is None]
+    def _retire(self, r: Request, status: str) -> None:
+        """Terminal transition for a non-finish exit (cancelled/expired)."""
+        r.status = status
+        r.done = True
+        r.cancel_requested = False
+        r.__dict__.pop("_prefix_chunks", None)
+        self.stats[status] += 1
+        if r.deadline_s is not None:
+            # An expired/cancelled deadlined request counts against
+            # goodput: it reached terminal state without finishing.
+            self.stats["deadline_total"] += 1
+
+    def _finish(self, r: Request) -> None:
+        r.done = True
+        r.status = "finished"
+        if r.deadline_s is not None:
+            self.stats["deadline_total"] += 1
+            if (r.submit_t is None
+                    or time.perf_counter() - r.submit_t <= r.deadline_s):
+                self.stats["deadline_met"] += 1
+        slot = r.slot
+        self._release_slot(r)
+        # Budget exhausted on device (len(generated) == max_new_tokens
+        # implies remaining == 0): no zeroing needed for a natural finish.
+        self._dirty_slots.discard(slot)
+
+    def _pick_victim(self, head: Request, wave_slots: set[int]
+                     ) -> Request | None:
+        """Choose a preemption victim for the page-gated ``head``: the
+        YOUNGEST (most recently admitted) resident.  Anti-livelock double
+        guard: a head that was itself preempted never triggers another
+        preemption, and only never-preempted residents are eligible
+        victims — so natural preemptions are bounded by the request count
+        and a preempt/restore ping-pong cannot form.  Slots admitted
+        earlier in the current wave are off-limits (their prefill hasn't
+        run; evicting them would corrupt the wave's buffers)."""
+        if not self.preemption or head.preempted_n > 0:
+            return None
+        cands = [
+            r for i, r in enumerate(self.slot_req)
+            if r is not None and i not in wave_slots and r.preempted_n == 0
+        ]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: r.admit_seq)
+
+    def _preempt(self, victim: Request, forced: bool = False) -> None:
+        """Evict a resident mid-stream and re-enqueue it for restore.
+        Pages release refcount-aware (shared pages are only dereferenced);
+        emitted tokens are already host-side in ``victim.generated``, and
+        re-admission prefills prompt + emitted (``_effective_prompt``) so
+        the restored stream is bit-identical by construction.  The victim
+        re-enters at the queue FRONT: residents are always older than
+        anything queued (FIFO admission), so appendleft preserves global
+        arrival order."""
+        self._release_slot(victim)
+        victim.status = "preempted"
+        victim.preempted_n += 1
+        self.queue.appendleft(victim)
+        self.stats["preempted"] += 1
+        if forced:
+            self.stats["preempted_forced"] += 1
+
+    def _chaos_forced_preempt(self) -> None:
+        """Chaos knob: with seeded probability cfg.chaos_preempt_p, force-
+        preempt the youngest resident at a wave boundary — exercising the
+        preempt/restore path even when the pool never gates (and for
+        non-paged layouts, where genuine page pressure can't arise)."""
+        if self._chaos_rng.random() >= self.cfg.chaos_preempt_p:
+            return
+        cands = [r for r in self.slot_req if r is not None]
+        if not cands:
+            return
+        self._preempt(max(cands, key=lambda r: r.admit_seq), forced=True)
+
+    def _deadline_hit(self, r: Request, now: float) -> bool:
+        return (r.deadline_s is not None and r.submit_t is not None
+                and now - r.submit_t > r.deadline_s)
+
+    def _sweep_lifecycle(self) -> None:
+        """Chunk-boundary sweep: retire cancelled/expired requests, queued
+        or resident.  Resident exits free the slot/pages/trie refs
+        mid-stream and keep the partial ``generated``."""
         now = time.perf_counter()
-        wave: list[tuple[int, Request]] = []
-        for slot in free:
-            if not self.queue:
-                break
-            if self.paged:
-                # Admission gates on free pages (FIFO head-of-line: a
-                # request that doesn't fit waits for pages to free rather
-                # than being overtaken).  With prefix sharing the head
-                # only needs pages for its UNSHARED suffix; the shared
-                # prefix rides resident pages via a refcount bump.  Alloc
-                # first, share only on success — a gated head must leave
-                # every refcount untouched.
-                head = self.queue[0]
-                shared, shared_len = [], 0
-                chunks = None
-                if self.prefix is not None:
-                    # Chunk the prompt once per REQUEST (memoized on it):
-                    # lookup and register reuse the list, and a page-gated
-                    # head re-tried every chunk boundary doesn't rebuild
-                    # it.  The lookup itself must re-run per attempt — the
-                    # resident chain can grow/shrink while the head waits.
-                    chunks = getattr(head, "_prefix_chunks", None)
-                    if chunks is None:
-                        chunks = self.prefix.chunks(head.prompt)
-                        head._prefix_chunks = chunks
-                    shared, shared_len = self._shared_prefix(head, chunks)
-                ids = self.allocator.alloc(self._pages_needed(head)
-                                           - len(shared))
-                if ids is None:
-                    break
+        if self.queue:
+            keep = []
+            for r in self.queue:
+                if r.cancel_requested:
+                    self._retire(r, "cancelled")
+                elif self._deadline_hit(r, now) or (
+                    r.max_queue_wait_s is not None
+                    and r.submit_t is not None
+                    and now - r.submit_t > r.max_queue_wait_s
+                ):
+                    self._retire(r, "expired")
+                else:
+                    keep.append(r)
+            if len(keep) != len(self.queue):
+                self.queue = collections.deque(keep)
+        for _, r in self._live():
+            if r.cancel_requested:
+                self._release_slot(r)
+                self._retire(r, "cancelled")
+            elif self._deadline_hit(r, now):
+                self._release_slot(r)
+                self._retire(r, "expired")
+
+    def _acquire_pages(self, head: Request, eff: np.ndarray,
+                       wave_slots: set[int]):
+        """Allocate the page table for the queue head (paged only):
+        shared resident prefix pages (refcount bump) + freshly allocated
+        private pages.  While the pool is short, preempt one eligible
+        victim per retry — each iteration either admits or removes a
+        resident, so the loop terminates.  The prefix lookup re-runs
+        every attempt (releasing a victim can shrink the resident chain);
+        alloc goes first and share only on success, so a gated head
+        leaves every refcount untouched.  Returns
+        ``(table, chunks, shared_tokens)`` or ``(None, None, 0)``."""
+        need = self._pages_needed(head)
+        while True:
+            shared, shared_len = [], 0
+            chunks = None
+            if self.prefix is not None:
+                # Chunk the effective prompt once per queue stint
+                # (memoized on the request): a page-gated head re-tried
+                # every chunk boundary doesn't rebuild it.  Preemption
+                # invalidates the memo (the effective prompt grows).
+                chunks = getattr(head, "_prefix_chunks", None)
+                if chunks is None:
+                    chunks = self.prefix.chunks(eff)
+                    head._prefix_chunks = chunks
+                shared, shared_len = self._shared_prefix(eff, chunks)
+            ids = self.allocator.alloc(need - len(shared))
+            if ids is not None:
                 if shared:
                     self.allocator.share(shared)
-                r = self.queue.popleft()
-                # The chunk memo exists only to amortize head-of-line
-                # retries; drop it at admission so engine-private (and
-                # page-size-dependent) state never outlives the queue.
-                r.__dict__.pop("_prefix_chunks", None)
-                r.prefix_tokens = shared_len
-                table = shared + ids
+                return shared + ids, chunks, shared_len
+            victim = self._pick_victim(head, wave_slots)
+            if victim is None:
+                return None, None, 0
+            self._preempt(victim)
+
+    def _admit_wave(self) -> None:
+        if self._chaos_rng is not None:
+            self._chaos_forced_preempt()
+        # Wave entries carry the request's EFFECTIVE prompt (prompt +
+        # previously emitted tokens for a preempted request being
+        # restored, DESIGN.md §5.5) — everything downstream (page demand,
+        # prefix chunks, prefill buffers, history) treats it as the
+        # prompt.
+        wave: list[tuple[int, Request, np.ndarray]] = []
+        wave_slots: set[int] = set()
+        now = time.perf_counter()
+        while self.queue:
+            slot = next(
+                (i for i, q in enumerate(self.slot_req) if q is None), None
+            )
+            if slot is None:
+                break
+            # Pop the head BEFORE any preemption retry: victims re-enter
+            # at the queue front (appendleft), which would displace a head
+            # still sitting at queue[0].
+            head = self.queue.popleft()
+            eff = self._effective_prompt(head)
+            if self.paged:
+                # Admission gates on free pages (FIFO head-of-line: a
+                # request that doesn't fit waits — or preempts — rather
+                # than being overtaken).  With prefix sharing the head
+                # only needs pages for its UNSHARED suffix; the shared
+                # prefix rides resident pages via a refcount bump.
+                table, chunks, shared_len = self._acquire_pages(
+                    head, eff, wave_slots
+                )
+                if table is None:
+                    self.queue.appendleft(head)
+                    break
+                head.prefix_tokens = shared_len
                 self._slot_pages[slot] = table
                 self.page_table[slot] = -1
                 self.page_table[slot, :len(table)] = table
@@ -756,20 +992,44 @@ class ServeEngine:
                     # Index this prompt's own full pages so later requests
                     # can attach; already-resident chunks keep their
                     # existing (shared) nodes.
-                    self.prefix.register(r.prompt, table[:len(chunks)],
+                    self.prefix.register(eff, table[:len(chunks)],
                                          chunks=chunks)
-                    if shared:
+                    if shared_len:
                         self.stats["prefix_hits"] += 1
-                        self.stats["prefix_pages_shared"] += len(shared)
+                        self.stats["prefix_pages_shared"] += (
+                            shared_len // self.page_size
+                        )
                         self.stats["prefix_tokens_shared"] += shared_len
             else:
-                r = self.queue.popleft()
-                r.prefix_tokens = 0    # contiguous: always a full prefill
-            r.admit_t = now
-            if r.submit_t is not None:
-                r.queue_wait_s = now - r.submit_t
-            wave.append((slot, r))
+                head.prefix_tokens = 0    # contiguous: always a full prefill
+            # The chunk memo exists only to amortize head-of-line retries;
+            # drop it at admission so engine-private (and page-size-
+            # dependent) state never outlives the queue.
+            head.__dict__.pop("_prefix_chunks", None)
+            head.admit_t = now
+            if head.submit_t is not None and head.queue_wait_s is None:
+                head.queue_wait_s = now - head.submit_t
+            head.status = "resident"
+            head.slot = slot
+            head.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            self.slot_req[slot] = head
+            if head.generated:
+                self.stats["recompute_tokens"] += len(head.generated)
+            wave.append((slot, head, eff))
+            wave_slots.add(slot)
+        # Park slots vacated mid-stream (preempt/cancel/expire) that this
+        # wave did not refill: their device budget must hit zero before
+        # the next chunk, or they would keep decoding into pages now
+        # owned by others.  (Wave slots are re-armed by the prefill's
+        # admitted mask, so they need no zeroing.)
+        stale = sorted(self._dirty_slots - wave_slots)
+        self._dirty_slots.clear()
+        if stale:
+            self.remaining = self.remaining.at[jnp.asarray(stale)].set(0)
         if not wave:
+            if self._chaos:
+                self.check_invariants()
             return
         # Attached slots prefill only their unshared suffix (prefix_tokens
         # is 0 without sharing), so the pad bucket — and the prefill's
@@ -778,17 +1038,17 @@ class ServeEngine:
         # (cheap, scatter-only) buffer, so drafting under sharing matches
         # the unshared engine.
         pad = _pad_bucket(
-            max(len(r.prompt) - r.prefix_tokens for _, r in wave),
+            max(len(eff) - r.prefix_tokens for _, r, eff in wave),
             self.max_len,
         )
         # The full-prompt history buffer only differs from the prefill
         # buffer when some wave member attached a prefix; otherwise the
         # suffix IS the prompt and one buffer serves both arguments.
-        attached = any(r.prefix_tokens for _, r in wave)
+        attached = any(r.prefix_tokens for _, r, _ in wave)
         toks = np.zeros((self.slots, pad), np.int32)
         if attached:
             hpad = _pad_bucket(
-                max(len(r.prompt) for _, r in wave), self.max_len
+                max(len(eff) for _, _, eff in wave), self.max_len
             )
             htoks = np.zeros((self.slots, hpad), np.int32)
         else:
@@ -796,21 +1056,26 @@ class ServeEngine:
         seg = np.zeros((self.slots,), np.int32)
         start = np.zeros((self.slots,), np.int32)
         new_rem = np.zeros((self.slots,), np.int32)
+        new_tidx = np.zeros((self.slots,), np.int32)
         new_seeds = np.zeros((self.slots,), np.int32)
-        for slot, r in wave:
-            n = len(r.prompt) - r.prefix_tokens
-            toks[slot, :n] = r.prompt[r.prefix_tokens:]   # right-pad; drops
+        for slot, r, eff in wave:
+            n = len(eff) - r.prefix_tokens
+            toks[slot, :n] = eff[r.prefix_tokens:]    # right-pad; drops
             if attached:
-                htoks[slot, :len(r.prompt)] = r.prompt
+                htoks[slot, :len(eff)] = eff
             seg[slot] = n
             start[slot] = r.prefix_tokens      # page-aligned attach cursor
-            new_rem[slot] = r.max_new_tokens - 1
+            # Restore-aware seeding: a fresh request samples stream index
+            # 0 with a full budget; a restored one samples index
+            # len(generated) with the unconsumed remainder (its last
+            # emitted token is part of the prefill, whose final logits
+            # reproduce the uninterrupted run's next sample).
+            new_rem[slot] = r.max_new_tokens - len(r.generated) - 1
+            new_tidx[slot] = len(r.generated)
             # Fold arbitrary Python ints (64-bit hashes, negatives) into
             # int32 range: still a pure function of the request's seed, so
             # determinism and order-independence are preserved.
             new_seeds[slot] = (0 if r.seed is None else r.seed) % (2 ** 31)
-            r.slot = slot
-            self.slot_req[slot] = r
         if self.paged:
             # Push the host free-list's view of the page table to device.
             # The table is tiny; replacing the leaf keeps the jitted prefill
@@ -825,8 +1090,9 @@ class ServeEngine:
          self.hist_len, self.seeds, nxt) = self._prefill(
             self.params, self.cache, toks_d, jnp.asarray(seg),
             jnp.asarray(start), htoks_d, self.cur_tok,
-            self.remaining, jnp.asarray(new_rem), self.tok_idx, self.hist,
-            self.hist_len, jnp.asarray(new_seeds), self.seeds,
+            self.remaining, jnp.asarray(new_rem), jnp.asarray(new_tidx),
+            self.tok_idx, self.hist, self.hist_len, jnp.asarray(new_seeds),
+            self.seeds,
         )
         first = np.asarray(nxt)                # host sync: 1 per wave
         self.stats["host_syncs"] += 1
@@ -837,7 +1103,7 @@ class ServeEngine:
                 self.n_pages - self.allocator.free_count(),
             )
         now = time.perf_counter()
-        for _, r in wave:
+        for _, r, _ in wave:
             r.generated.append(int(first[r.slot]))
             self.stats["prefill_tokens"] += 1
             if r.ttft_s is None and r.admit_t is not None:
@@ -846,6 +1112,8 @@ class ServeEngine:
                 r.ttft_s = now - r.admit_t
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
+        if self._chaos:
+            self.check_invariants()
 
     def _run_chunk(self) -> None:
         (self.cache, self.cur_tok, self.remaining, self.tok_idx, self.hist,
@@ -893,13 +1161,90 @@ class ServeEngine:
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
 
+    def check_invariants(self) -> None:
+        """Assert engine/allocator/trie conservation (DESIGN.md §5.5);
+        called after every wave under chaos and by the fault-injection
+        tests.  Uses identity (never ``==``) for request membership —
+        dataclass equality on array fields is both wrong and throwing.
+
+        * slot/queue partition: a request is resident in exactly the slot
+          that maps it, never also queued, and never terminal;
+        * pages held ≡ slot page tables: the allocator's held set is
+          exactly the union of resident slots' pages, refcounts equal the
+          number of slot tables mapping each page (the trie holds no
+          references), and free + held partitions the pool — zero leaks;
+        * the device-visible page-table rows mirror the host tables;
+        * trie residency ⊆ held pages (no node outlives its storage).
+        """
+        queued = list(self.queue)
+        for slot, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            assert r.slot == slot, f"slot {slot} maps request at {r.slot}"
+            assert not r.done and r.status == "resident", (
+                f"slot {slot} holds a {r.status!r} request"
+            )
+            assert not any(q is r for q in queued), (
+                f"request {r.id!r} is both resident and queued"
+            )
+            assert len(r.generated) < r.max_new_tokens
+        for q in queued:
+            assert not q.done and q.status in ("queued", "preempted"), (
+                f"queued request {q.id!r} has status {q.status!r}"
+            )
+        if not self.paged:
+            return
+        slot_refs: collections.Counter[int] = collections.Counter()
+        for slot in range(self.slots):
+            pages = self._slot_pages[slot]
+            row = self.page_table[slot]
+            if self.slot_req[slot] is None:
+                assert pages == [], f"vacant slot {slot} leaks pages {pages}"
+                assert (row == -1).all(), f"vacant slot {slot} maps {row}"
+                continue
+            assert len(pages) == len(set(pages)), (
+                f"slot {slot} maps a page twice: {pages}"
+            )
+            assert list(row[:len(pages)]) == pages, (
+                f"device/host page-table drift in slot {slot}"
+            )
+            assert (row[len(pages):] == -1).all()
+            slot_refs.update(pages)
+        held = self.allocator.held_pages
+        assert held == set(slot_refs), (
+            f"held/mapped drift: leaked={sorted(held - set(slot_refs))} "
+            f"phantom={sorted(set(slot_refs) - held)}"
+        )
+        for page, refs in slot_refs.items():
+            assert self.allocator.ref_count(page) == refs, (
+                f"page {page}: allocator refcount "
+                f"{self.allocator.ref_count(page)} != {refs} mapping slots"
+            )
+        free = self.allocator.free_pages
+        assert len(free) == len(set(free)) and not held & set(free)
+        assert sorted(list(free) + list(held)) == list(range(self.n_pages)), (
+            "free + held is not a partition of the pool"
+        )
+        if self.prefix is not None:
+            stray = self.prefix.resident_pages() - held
+            assert not stray, f"trie nodes outlive their pages: {stray}"
+
+    def step(self) -> bool:
+        """One scheduler tick: lifecycle sweep (cancel/expire), admission
+        (with preemption), then one decode chunk if anything is resident.
+        Returns True while work remains — callers interleave ``cancel()``
+        / ``submit()`` with ``step()`` for mid-stream control."""
+        self._sweep_lifecycle()
+        self._admit_wave()
+        if self.slot_req.count(None) < self.slots:
+            (self._run_spec_chunk if self.spec else self._run_chunk)()
+        return bool(self.queue) or self.slot_req.count(None) < self.slots
+
     def drain(self) -> None:
-        """Run admission + chunked decode until queue and slots are empty."""
-        run = self._run_spec_chunk if self.spec else self._run_chunk
-        while self.queue or self.slot_req.count(None) < self.slots:
-            self._admit_wave()
-            if self.slot_req.count(None) < self.slots:
-                run()
+        """Run the scheduler until no work remains (all requests reach a
+        terminal state: finished, cancelled or expired)."""
+        while self.step():
+            pass
 
     def run(self, requests: list[Request]) -> list[Request]:
         self.submit(requests)

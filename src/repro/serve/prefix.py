@@ -142,3 +142,10 @@ class PrefixIndex:
     def resident_tokens(self) -> int:
         """Total prompt tokens currently indexed (nodes x page_size)."""
         return len(self._by_page) * self.page_size
+
+    def resident_pages(self) -> set[int]:
+        """Physical page ids currently indexed.  The trie holds no
+        references, so every one of these MUST be held by the allocator —
+        the engine's ``check_invariants`` asserts exactly that (a trie
+        page outliving its last reference would alias freed storage)."""
+        return set(self._by_page)

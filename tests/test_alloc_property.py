@@ -191,6 +191,45 @@ RefcountedAllocatorMachine.TestCase.settings = settings(
 TestRefcountedAllocator = RefcountedAllocatorMachine.TestCase
 
 
+class ChaosAllocatorMachine(RefcountedAllocatorMachine):
+    """The same alloc/share/release interleavings against the fault-
+    injecting `serve.chaos.ChaosAllocator`: injected refusals must be
+    exactly as atomic as genuine over-commits (nothing popped, nothing
+    referenced) and every refcount/partition invariant must survive the
+    interleaving of injected and genuine failures."""
+
+    def __init__(self):
+        super().__init__()
+        from repro.serve.chaos import ChaosAllocator
+        self.alloc = ChaosAllocator(_POOL, fail_p=0.35, seed=11)
+
+    @rule(n=st.integers(min_value=0, max_value=_POOL + 2))
+    def do_alloc(self, n):
+        before_free = self.alloc.free_count()
+        before_refs = self.alloc.total_refs()
+        ids = self.alloc.alloc(n)
+        if ids is None:
+            # Genuine over-commit or injected refusal — either way the
+            # failure is atomic and the two are distinguishable only via
+            # last_injected (the engine can't tell, by design).
+            assert n > before_free or self.alloc.last_injected
+            assert self.alloc.free_count() == before_free
+            assert self.alloc.total_refs() == before_refs
+        else:
+            assert not self.alloc.last_injected
+            assert len(ids) == n == len(set(ids))
+            for i in ids:
+                assert i not in self.mirror, "page handed out twice"
+                self.mirror[i] = 1
+            self.handles.append(list(ids))
+
+
+ChaosAllocatorMachine.TestCase.settings = settings(
+    max_examples=40, stateful_step_count=50, deadline=None
+)
+TestChaosAllocator = ChaosAllocatorMachine.TestCase
+
+
 @settings(max_examples=100, deadline=None)
 @given(extra=st.integers(min_value=1, max_value=8),
        held_n=st.integers(min_value=0, max_value=8))

@@ -1,0 +1,120 @@
+"""Hypothesis state machine for the request lifecycle (DESIGN.md §5.5).
+
+Random submit / cancel / expire / step interleavings against a REAL tiny
+``ServeEngine`` with chaos knobs armed — step() internally exercises
+preemption, seeded alloc refusals and forced preemptions — asserting the
+full engine/allocator/trie conservation invariant after every rule.
+Separate from ``test_lifecycle`` so the deterministic lifecycle tests
+still run when hypothesis is absent (this module then skips, like
+``test_alloc_property``; see requirements-dev.txt).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine,
+    invariant,
+    rule,
+)
+
+from repro.models import build_model, get_config  # noqa: E402
+from repro.serve.engine import (  # noqa: E402
+    AdmissionReject,
+    Request,
+    ServeEngine,
+)
+
+_ENGINE = None
+
+
+def _shared_engine():
+    """One tiny REAL engine reused across examples (compile once); every
+    example starts from a drained engine — stats accumulate, but the
+    invariants are state- not counter-based."""
+    global _ENGINE
+    if _ENGINE is None:
+        cfg = dataclasses.replace(
+            get_config("yi-9b", smoke=True),
+            cache_layout="paged", kv_page_size=8,
+            prefix_sharing=True, chaos_alloc_fail_p=0.2,
+            chaos_preempt_p=0.2, chaos_seed=99,
+        )
+        params = build_model(cfg).init(jax.random.PRNGKey(9))
+        _ENGINE = ServeEngine(cfg, params, batch_slots=2, max_len=16,
+                              chunk_size=2, n_pages=3, max_queue=6)
+    return _ENGINE
+
+
+class LifecycleMachine(RuleBasedStateMachine):
+    """Interleaves submit / cancel / expire (via deadlines) / step —
+    which internally exercises preempt, chaos alloc failures and forced
+    preemptions — against a real ServeEngine, asserting the full
+    engine/allocator/trie conservation invariant after every rule.  The
+    per-wave auto-check inside the engine (armed by the chaos knobs)
+    additionally fires mid-step."""
+
+    def __init__(self):
+        super().__init__()
+        self.eng = _shared_engine()
+        while self.eng.step():               # drain any prior example
+            pass
+        self.rng = np.random.default_rng(17)
+        self.inflight: list[Request] = []
+
+    @rule(n_prompt=st.integers(min_value=1, max_value=6),
+          budget=st.integers(min_value=1, max_value=6),
+          deadline=st.sampled_from([None, 60.0, 1e-6]))
+    def do_submit(self, n_prompt, budget, deadline):
+        r = Request(
+            prompt=self.rng.integers(
+                0, self.eng.cfg.vocab, size=n_prompt
+            ).astype(np.int32),
+            max_new_tokens=budget,
+            deadline_s=deadline,
+            seed=int(self.rng.integers(0, 2 ** 31)),
+        )
+        try:
+            self.eng.submit([r])
+            self.inflight.append(r)
+        except AdmissionReject as e:
+            assert e.reason in ("queue_full", "pool_too_small", "max_len")
+
+    @rule(data=st.data())
+    def do_cancel(self, data):
+        live = [r for r in self.inflight if not r.done]
+        if not live:
+            return
+        r = live[data.draw(st.integers(0, len(live) - 1), label="victim")]
+        assert self.eng.cancel(r.id)
+
+    @rule()
+    def do_step(self):
+        self.eng.step()
+
+    @invariant()
+    def conserved(self):
+        self.eng.check_invariants()
+
+    def teardown(self):
+        while self.eng.step():
+            pass
+        self.eng.check_invariants()
+        for r in self.inflight:
+            assert r.done and r.status in (
+                "finished", "cancelled", "expired"
+            )
+            if r.status == "finished":
+                assert len(r.generated) == r.max_new_tokens
+        assert sorted(self.eng.free_pages) == list(range(self.eng.n_pages))
+
+
+LifecycleMachine.TestCase.settings = settings(
+    max_examples=8, stateful_step_count=12, deadline=None,
+)
+TestLifecycleMachine = LifecycleMachine.TestCase
