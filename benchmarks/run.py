@@ -151,9 +151,15 @@ def main(argv=None) -> None:
             # stay bit-identical to the fault-free run and leak no pages.
             chaos_rows, chaos_summary = serve_bench.chaos_rows()
             _emit(chaos_rows, rows)
+            # Crash recovery: every cache family crashes mid-flight and
+            # restores bit-identically from snapshot + journal; the
+            # corruption leg must detect, quarantine and heal.
+            recovery_rows, recovery_summary = serve_bench.recovery_rows()
+            _emit(recovery_rows, rows)
             serve_summary = {**serve_summary, **paged_summary,
                              **family_summary, **spec_summary,
-                             **prefix_summary, **chaos_summary}
+                             **prefix_summary, **chaos_summary,
+                             **recovery_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 

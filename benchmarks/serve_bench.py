@@ -38,6 +38,18 @@ Emitted metrics (also merged into ``benchmarks.run --json`` output):
                              forced preemptions), both asserted
                              bit-identical to the fault-free run with zero
                              leaked pages and engine invariants held
+* ``serve_recovery``       — crash recovery (``recovery_rows``): every
+                             cache family crashes mid-flight (journal +
+                             injected ``ChaosCrash``, snapshot at wave 1,
+                             late submits after the snapshot) and a FRESH
+                             engine restores + finishes; shared-prefix
+                             dense adds a {sharing on} leg and a
+                             corruption leg (seeded device bit-flips
+                             detected, quarantined, recompute-healed).
+                             Every leg asserts bit-identity to the
+                             uninterrupted run and zero leaked pages;
+                             ``--recovery-report`` writes the rows as the
+                             CI artifact
 
 ``python -m benchmarks.serve_bench --identity-only`` runs only the
 bit-identity checks (the CI gate) — paged vs contiguous, speculative vs
@@ -834,6 +846,192 @@ def chaos_rows(identity_only: bool = False):
                                   if k != "name"}}
 
 
+# ---------------------------------------------------------------------------
+# Crash recovery: snapshot/journal restore identity per cache family
+# ---------------------------------------------------------------------------
+
+RECOVERY_CRASH_WAVE = 2     # late submits force wave 2, so the crash fires
+RECOVERY_CORRUPT_P = 0.5
+
+
+def _recovery_extras(cfg):
+    """Conditioning for stateful-context families, tiled IDENTICALLY
+    across slots.  The encdec/vlm stubs key their conditioning by SLOT
+    (an engine fixture standing in for per-request audio/image), so a
+    request restored into a different slot would be conditioned on
+    different context; recovery identity is about rebuilding KV from
+    host truth, not about pinning slot placement, so the recovery leg
+    makes the conditioning slot-invariant."""
+    if cfg.family == "encdec":
+        one = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(4), (1, cfg.enc_seq, cfg.d_model), jnp.float32
+        ))
+        return {"frames": np.broadcast_to(
+            one, (FAMILY_SLOTS, cfg.enc_seq, cfg.d_model)).copy()}
+    if cfg.family == "vlm":
+        one = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(3), (1, cfg.n_vis_tokens, cfg.d_model),
+            jnp.float32,
+        ))
+        return {"vis": np.broadcast_to(
+            one, (FAMILY_SLOTS, cfg.n_vis_tokens, cfg.d_model)).copy()}
+    return {}
+
+
+def recovery_rows(identity_only: bool = False, report_path: str | None = None):
+    """Crash/restore identity gate (DESIGN.md §5.6), per cache family.
+
+    Per leg: an uninterrupted reference run records the expected streams;
+    then a journal-armed engine admits half the workload, snapshots at a
+    chunk boundary, takes the second half, and dies on an injected
+    ``ChaosCrash`` at a flushed chunk boundary; a FRESH engine restores
+    from snapshot + journal suffix and finishes.  Results must match the
+    reference stream-for-stream with zero leaked pages (free +
+    quarantined partitions the pool, nothing held).  Dense adds a
+    {sharing on} leg (restored residents re-attach through the trie) and
+    a corruption leg (seeded device bit-flips on stamped pages must be
+    detected, quarantined and recompute-healed — still bit-identical).
+    """
+    from repro.serve.chaos import ChaosCrash
+
+    import json
+    import os
+    import tempfile
+
+    tmpdir = tempfile.mkdtemp(prefix="serve-recovery-")
+    rows = []
+    for arch, has_kv in FAMILY_ARCHS:
+        cfg0 = get_config(arch, smoke=True)
+        params = build_model(cfg0).init(jax.random.PRNGKey(0))
+        extras = _recovery_extras(cfg0)
+        legs = [False, True] if (has_kv and cfg0.family in ("dense", "moe")) \
+            else [False]
+        for sharing in legs:
+            if has_kv:
+                c = dataclasses.replace(
+                    cfg0, cache_layout="paged", kv_page_size=FAMILY_PAGE,
+                    prefix_sharing=sharing,
+                )
+                kw = {"n_pages": FAMILY_POOL}
+            else:
+                c, kw = cfg0, {}
+
+            def engine(cc, **ekw):
+                return ServeEngine(cc, params, batch_slots=FAMILY_SLOTS,
+                                   max_len=FAMILY_MAX_LEN, chunk_size=4,
+                                   extras=extras, **kw, **ekw)
+
+            tag = f"{arch}/{'shared' if sharing else 'unshared'}"
+            ref_eng = engine(c)
+            ref_eng.run(_family_requests(cfg0, seed=1))
+            ref_out = ref_eng.results()
+
+            jpath = os.path.join(tmpdir, f"{tag.replace('/', '-')}.jsonl")
+            spath = os.path.join(tmpdir, f"{tag.replace('/', '-')}.json")
+            crashed = engine(
+                dataclasses.replace(
+                    c, chaos_crash_after_wave=RECOVERY_CRASH_WAVE
+                ),
+                journal_path=jpath,
+            )
+            reqs = _family_requests(cfg0, seed=1)
+            crashed.submit(reqs[:2])
+            crashed.step()
+            crashed.snapshot(spath)
+            crashed.submit(reqs[2:])         # journal-only: past the snapshot
+            try:
+                crashed.drain()
+                raise AssertionError(f"{tag}: injected crash never fired")
+            except ChaosCrash as cc:
+                crash_wave = cc.wave
+            # The crashed engine is dead by contract; a FRESH engine
+            # restores from its on-disk snapshot + journal suffix.
+            eng = engine(c, journal_path=jpath)
+            rep = eng.restore(spath)
+            eng.drain()
+            got = eng.results()
+            bad = [rid for rid in ref_out if got.get(rid) != ref_out[rid]]
+            assert not bad, (
+                f"crash-recovery identity violated on {tag} for {bad}"
+            )
+            leaked = 0
+            if has_kv:
+                free = sorted(eng.free_pages)
+                quar = sorted(eng.allocator.quarantined_pages)
+                leaked = eng.n_pages - len(free) - len(quar)
+                assert sorted(free + quar) == list(range(eng.n_pages)), (
+                    f"{tag} leg leaked pages: free={free} quarantined={quar}"
+                )
+                eng.check_invariants()
+            rows.append({
+                "name": f"serve/recovery_{tag}",
+                "crash_wave": crash_wave,
+                "restored": rep["restored"],
+                "replayed_events": rep["replayed_events"],
+                "leaked_pages": leaked,
+                "bit_identical": True,
+            })
+            if identity_only:
+                print(f"recovery {tag}: bit-identical after crash at wave "
+                      f"{crash_wave} (restored={rep['restored']}, "
+                      f"replayed={rep['replayed_events']}, leaked pages=0)")
+
+        # Corruption leg: dense paged + sharing, seeded device bit-flips.
+        if arch == SERVE_ARCH:
+            c = dataclasses.replace(
+                cfg0, cache_layout="paged", kv_page_size=FAMILY_PAGE,
+                prefix_sharing=True,
+            )
+            ref_eng = ServeEngine(c, params, batch_slots=FAMILY_SLOTS,
+                                  max_len=FAMILY_MAX_LEN, chunk_size=4,
+                                  n_pages=FAMILY_POOL)
+            ref_eng.run(_family_requests(cfg0, seed=1))
+            ref_out = ref_eng.results()
+            crpt = dataclasses.replace(
+                c, chaos_corrupt_p=RECOVERY_CORRUPT_P, chaos_seed=3
+            )
+            eng = ServeEngine(crpt, params, batch_slots=FAMILY_SLOTS,
+                              max_len=FAMILY_MAX_LEN, chunk_size=4,
+                              n_pages=FAMILY_POOL)
+            eng.run(_family_requests(cfg0, seed=1))
+            s = eng.stats
+            assert s["injected_corruptions"] >= 1, "corruption never fired"
+            assert s["corrupted_pages"] == s["injected_corruptions"], (
+                "an injected corruption escaped detection"
+            )
+            assert eng.results() == ref_out, (
+                "corruption healing changed emitted tokens"
+            )
+            free = sorted(eng.free_pages)
+            quar = sorted(eng.allocator.quarantined_pages)
+            assert sorted(free + quar) == list(range(eng.n_pages))
+            eng.check_invariants()
+            rows.append({
+                "name": f"serve/recovery_{arch}/corruption",
+                "injected_corruptions": s["injected_corruptions"],
+                "corrupted_pages_detected": s["corrupted_pages"],
+                "healed_requests": s["healed_requests"],
+                "quarantined_pages": len(quar),
+                "leaked_pages": 0,
+                "bit_identical": True,
+            })
+            if identity_only:
+                print(f"recovery {arch}/corruption: "
+                      f"{s['corrupted_pages']} corruption(s) detected, "
+                      f"quarantined and recompute-healed, bit-identical, "
+                      "leaked pages=0")
+
+    if report_path:
+        with open(report_path, "w") as f:
+            json.dump({"serve_recovery": rows}, f, indent=1)
+        print(f"recovery report written to {report_path}")
+    return rows, {"serve_recovery": {
+        r["name"].removeprefix("serve/recovery_"): {
+            k: v for k, v in r.items() if k != "name"
+        } for r in rows
+    }}
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -846,8 +1044,15 @@ if __name__ == "__main__":
                          "shared-prefix vs unshared with the effective-"
                          "capacity floor, and the chaos leg (preemption + "
                          "seeded fault injection must not change a token "
-                         "and must leak zero pages) (CI gate); nonzero "
-                         "exit on any violation")
+                         "and must leak zero pages), and the crash-"
+                         "recovery leg (every family crashes mid-flight "
+                         "and restores bit-identically from snapshot + "
+                         "journal) (CI gate); nonzero exit on any "
+                         "violation")
+    ap.add_argument("--recovery-report", metavar="PATH", default=None,
+                    help="write the crash-recovery rows (per-family "
+                         "crash/restore + corruption-healing results) as "
+                         "JSON to PATH (the CI artifact)")
     args = ap.parse_args()
     if args.identity_only:
         family_rows(identity_only=True)
@@ -855,6 +1060,7 @@ if __name__ == "__main__":
         spec_rows(identity_only=True)
         prefix_rows(identity_only=True)
         chaos_rows(identity_only=True)
+        recovery_rows(identity_only=True, report_path=args.recovery_report)
         print("serve bit-identity: PASS")
     else:
         rows, summary = serve_rows()
@@ -863,10 +1069,11 @@ if __name__ == "__main__":
         srows, ssummary = spec_rows()
         xrows, xsummary = prefix_rows()
         crows, csummary = chaos_rows()
-        for r in rows + prows + frows + srows + xrows + crows:
+        rrows, rsummary = recovery_rows(report_path=args.recovery_report)
+        for r in rows + prows + frows + srows + xrows + crows + rrows:
             print(r)
         print(json.dumps(
             {**summary, **psummary, **fsummary, **ssummary, **xsummary,
-             **csummary},
+             **csummary, **rsummary},
             indent=1,
         ))

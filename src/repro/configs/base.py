@@ -77,7 +77,23 @@ class ModelConfig:
     # Probabilities must stay < 1.0 or the serve loop cannot make progress.
     chaos_alloc_fail_p: float = 0.0    # P(injected alloc refusal) per alloc
     chaos_preempt_p: float = 0.0       # P(forced preemption) per wave
-    chaos_seed: int = 0                # seeds both chaos RNGs
+    chaos_seed: int = 0                # seeds every chaos RNG
+    # Crash safety + KV integrity (serve.snapshot, DESIGN.md §5.6).
+    # strict_invariants arms the per-wave check_invariants() sweep even
+    # with no chaos knob set (CI tier-1 also arms it via the
+    # REPRO_STRICT_INVARIANTS env var).  kv_integrity stamps per-page
+    # fingerprints at chunk boundaries and verifies them every step,
+    # quarantining + recompute-healing any corrupted page.  The remaining
+    # chaos knobs inject the failures those paths exist for: seeded
+    # device-side bit flips on stamped pages and a typed ChaosCrash after
+    # the Nth admission wave (0 = off).  Snapshot config fingerprints
+    # exclude all chaos_* knobs and strict_invariants, so a restore may
+    # run with them off.
+    strict_invariants: bool = False
+    kv_integrity: bool = False
+    chaos_share_fail_p: float = 0.0    # P(injected share refusal) per share
+    chaos_corrupt_p: float = 0.0       # P(bit-flip on a stamped page) per step
+    chaos_crash_after_wave: int = 0    # raise ChaosCrash after wave N (0=off)
     # Numerics / sharding
     dtype: str = "bfloat16"
     vocab_pad_multiple: int = 2048   # pad vocab so `model` axis (16) divides it

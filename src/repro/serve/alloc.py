@@ -10,13 +10,19 @@ from __future__ import annotations
 
 class PageAllocator:
     """Refcounted host-side LIFO free-list over a fixed page pool
-    (DESIGN.md §5.2, refcounts §5.4).
+    (DESIGN.md §5.2, refcounts §5.4, quarantine §5.6).
 
     Every held page carries a reference count: ``alloc`` hands out pages
     at refcount 1, ``share`` adds a reference to already-held pages (a new
     slot's page table aliasing a resident prefix page), and ``release``
     drops one — a page returns to the free list only at refcount zero, so
     a shared prefix page survives its original owner finishing.
+
+    ``quarantine`` takes a page out of circulation permanently (KV
+    integrity, DESIGN.md §5.6): a free page leaves the free list at once,
+    a held page is marked *doomed* and diverts to the quarantine set —
+    never back to the free list — when its last reference drops.  ``alloc``
+    can therefore never hand out a quarantined page.
 
     Invariants (property-tested in ``tests/test_alloc_property.py``,
     including a hypothesis state machine over alloc/share/release
@@ -30,7 +36,8 @@ class PageAllocator:
       now pinned by a regression test),
     * no page is freed while references remain, and references are
       conserved across share/release interleavings,
-    * held + free is a partition of the pool at all times (no leaks).
+    * held + free + quarantined is a partition of the pool at all times
+      (no leaks; ``quarantined`` is empty until integrity quarantines).
     """
 
     def __init__(self, n_pages: int):
@@ -38,6 +45,8 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free = list(range(n_pages))
         self._refs: dict[int, int] = {}
+        self._quarantined: set[int] = set()   # out of circulation, refs == 0
+        self._doomed: set[int] = set()        # held; quarantine at last release
 
     @property
     def free_pages(self) -> list[int]:
@@ -47,8 +56,41 @@ class PageAllocator:
     def held_pages(self) -> set[int]:
         return set(self._refs)
 
+    @property
+    def quarantined_pages(self) -> set[int]:
+        """Pages permanently out of circulation (refcount 0)."""
+        return set(self._quarantined)
+
+    @property
+    def doomed_pages(self) -> set[int]:
+        """Held pages marked for quarantine at their last release."""
+        return set(self._doomed)
+
     def free_count(self) -> int:
         return len(self._free)
+
+    def usable_pages(self) -> int:
+        """Pool capacity excluding quarantined and doomed pages — the
+        honest upper bound an admission gate may promise against."""
+        return self.n_pages - len(self._quarantined) - len(self._doomed)
+
+    def quarantine(self, page: int) -> bool:
+        """Take ``page`` out of circulation (corrupt KV, DESIGN.md §5.6).
+
+        A free page moves to the quarantine set immediately; a held page
+        is marked doomed and diverts there — never back to the free
+        list — when its final reference is released.  Returns False if
+        the page was already quarantined/doomed (idempotent)."""
+        if not (0 <= page < self.n_pages):
+            raise ValueError(f"quarantine({page}) outside pool")
+        if page in self._quarantined or page in self._doomed:
+            return False
+        if page in self._refs:
+            self._doomed.add(page)
+        else:
+            self._free.remove(page)
+            self._quarantined.add(page)
+        return True
 
     def ref_count(self, page: int) -> int:
         """Current reference count of ``page`` (0 if free)."""
@@ -70,9 +112,11 @@ class PageAllocator:
             self._refs[i] = 1
         return ids
 
-    def share(self, ids) -> None:
+    def share(self, ids) -> bool:
         """Add one reference to each held page in ``ids`` (a new sharer's
-        page table now aliases them).  Sharing a free page is a bug."""
+        page table now aliases them).  Sharing a free page is a bug.
+        Returns True; the chaos subclass returns False on an injected
+        refusal having touched no refcount (atomic, like ``alloc``)."""
         ids = list(ids)
         assert len(ids) == len(set(ids)), (
             f"duplicate page ids in share(): {ids}"
@@ -81,11 +125,13 @@ class PageAllocator:
         assert not bad, f"sharing pages not held: {bad}"
         for i in ids:
             self._refs[i] += 1
+        return True
 
     def release(self, ids) -> list[int]:
         """Drop one reference per page; pages reaching refcount zero
-        return to the free list.  Returns the ids actually freed (the
-        engine evicts their trie nodes)."""
+        return to the free list — or to quarantine if doomed.  Returns
+        the ids no longer held (the engine evicts their trie nodes and
+        drops their integrity stamps), whether freed or quarantined."""
         ids = list(ids)
         assert len(ids) == len(set(ids)), (
             f"duplicate page ids in free(): {ids}"
@@ -97,7 +143,11 @@ class PageAllocator:
             self._refs[i] -= 1
             if self._refs[i] == 0:
                 del self._refs[i]
-                self._free.append(i)
+                if i in self._doomed:
+                    self._doomed.discard(i)
+                    self._quarantined.add(i)
+                else:
+                    self._free.append(i)
                 freed.append(i)
         return freed
 

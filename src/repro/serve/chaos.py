@@ -1,10 +1,12 @@
-"""Fault injection for the serve tier (DESIGN.md §5.5).
+"""Fault injection for the serve tier (DESIGN.md §5.5, crash/integrity §5.6).
 
 Robustness of the engine's lifecycle state machine is only credible if
 the failure paths actually run.  This module makes them run on demand:
 
 * ``ChaosAllocator`` — a ``PageAllocator`` that, with seeded probability
-  ``fail_p``, refuses an otherwise-satisfiable ``alloc``.  An injected
+  ``fail_p``, refuses an otherwise-satisfiable ``alloc``, and with
+  ``share_fail_p`` an otherwise-satisfiable ``share`` (the alloc-own-
+  then-share admission ordering's second failure point).  An injected
   failure is indistinguishable from genuine pool exhaustion to the
   engine, so it exercises the same gating/preemption/retry paths, while
   staying atomic (nothing popped, nothing referenced) and fully
@@ -13,6 +15,13 @@ the failure paths actually run.  This module makes them run on demand:
   wave boundaries and preempts a healthy resident (see
   ``ServeEngine._admit_wave``); that logic lives in the engine, this
   module only supplies the seeded RNG convention.
+* crash points — ``cfg.chaos_crash_after_wave`` makes the engine raise
+  ``ChaosCrash`` at the end of the step that completed admission wave N
+  (journal flushed first, so on-disk state sits at a chunk boundary);
+  the recovery harness restores a fresh engine from snapshot + journal.
+* page corruption — ``cfg.chaos_corrupt_p`` flips a value inside a
+  fingerprint-stamped KV page on device; ``verify_pages()`` must detect,
+  quarantine and recompute-heal it (DESIGN.md §5.6).
 
 Because every drop of state an injected fault perturbs is recomputed
 from host-side truth (tokens, refcounts, page tables), a chaos run must
@@ -26,22 +35,42 @@ import numpy as np
 from repro.serve.alloc import PageAllocator
 
 
-class ChaosAllocator(PageAllocator):
-    """``PageAllocator`` with seeded, probabilistic alloc failures.
+class ChaosCrash(RuntimeError):
+    """Injected process kill (``cfg.chaos_crash_after_wave``).
 
-    Only positive-size allocations can fail (``alloc(0)`` is a no-op the
-    engine uses for fully-shared prefixes; failing it would fabricate a
-    gating state the real allocator can never produce).  ``last_injected``
-    lets tests distinguish an injected refusal from a genuine
-    out-of-pages refusal on the immediately preceding call.
+    Raised at the end of a step, after the request journal has been
+    flushed, so the on-disk snapshot + journal state corresponds exactly
+    to a chunk boundary.  The crashed engine object is dead by contract:
+    recovery constructs a fresh engine and calls ``restore``.
     """
 
-    def __init__(self, n_pages: int, fail_p: float, seed: int = 0):
+    def __init__(self, wave: int):
+        super().__init__(f"injected crash after admission wave {wave}")
+        self.wave = wave
+
+
+class ChaosAllocator(PageAllocator):
+    """``PageAllocator`` with seeded, probabilistic alloc/share failures.
+
+    Only positive-size calls can fail (``alloc(0)``/``share([])`` are
+    no-ops the engine uses for fully-shared and fully-owned prefixes;
+    failing them would fabricate a gating state the real allocator can
+    never produce).  ``last_injected`` lets tests distinguish an injected
+    refusal from a genuine out-of-pages refusal on the immediately
+    preceding call.  Both failure modes are atomic: a refused ``share``
+    perturbs no refcount, exactly as a refused ``alloc`` pops nothing.
+    """
+
+    def __init__(self, n_pages: int, fail_p: float, seed: int = 0,
+                 share_fail_p: float = 0.0):
         super().__init__(n_pages)
         assert 0.0 <= fail_p <= 1.0, fail_p
+        assert 0.0 <= share_fail_p <= 1.0, share_fail_p
         self.fail_p = fail_p
+        self.share_fail_p = share_fail_p
         self._rng = np.random.default_rng(seed)
         self.injected_failures = 0
+        self.injected_share_failures = 0
         self.last_injected = False
 
     def alloc(self, n: int) -> list[int] | None:
@@ -51,3 +80,13 @@ class ChaosAllocator(PageAllocator):
             self.last_injected = True
             return None
         return super().alloc(n)
+
+    def share(self, ids) -> bool:
+        self.last_injected = False
+        ids = list(ids)
+        if (ids and self.share_fail_p > 0.0
+                and self._rng.random() < self.share_fail_p):
+            self.injected_share_failures += 1
+            self.last_injected = True
+            return False
+        return super().share(ids)

@@ -67,12 +67,25 @@ loop, not the policy search, is the artifact that must be fast):
   reject-with-reason backpressure (`AdmissionReject`), and
   `check_invariants()` + `serve.chaos` fault injection prove the
   allocator/trie/engine state machine survives all of it.
+* **Crash safety + KV integrity** (DESIGN.md §5.6) — ``snapshot(path)``
+  serializes host-side truth only (requests, tokens, seeds, refcounts,
+  quarantine) and ``restore(path)`` rebuilds all device KV bit-identically
+  through ordinary re-admission; an optional fsync'd request journal
+  (``journal_path``) replays submissions/terminations past the snapshot
+  after an unplanned kill.  With ``cfg.kv_integrity`` the engine stamps
+  per-page fingerprints at chunk boundaries and ``verify_pages()``
+  detects silent corruption, quarantines the page in the allocator
+  (refcount-aware: every prefix sharer is repaired) and self-heals the
+  mapped slots by recompute-restore.  ``drain()`` carries a livelock
+  watchdog (``NoProgressError``) so a starved pool fails loudly.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
+import zlib
 from typing import Any
 
 import jax
@@ -85,12 +98,15 @@ from repro.core import CachePolicyEngine, make_engine
 from repro.core.characterize import attention_op
 from repro.models import build_model
 from repro.models.common import paged_kv_spec
+from repro.serve import snapshot as snap
 from repro.serve.alloc import PageAllocator  # noqa: F401  (re-export: the
 # allocator lives in serve.alloc since the chaos wrapper subclasses it;
-# property tests and older call sites import it from here)
-from repro.serve.chaos import ChaosAllocator
+# property tests and older call sites import it from there)
+from repro.serve.chaos import ChaosAllocator, ChaosCrash
 from repro.serve.draft import ngram_propose
 from repro.serve.prefix import PrefixIndex
+from repro.serve.snapshot import SnapshotError  # noqa: F401  (re-export:
+# engine callers catch restore failures without importing serve.snapshot)
 from repro.serve.sampling import (  # noqa: F401  (greedy_sample re-export)
     Sampler,
     greedy_sample,
@@ -148,6 +164,16 @@ class AdmissionReject(ValueError):
         self.reason = reason
 
 
+class NoProgressError(RuntimeError):
+    """``drain()`` livelock watchdog (DESIGN.md §5.6): raised after
+    ``no_progress_limit`` consecutive steps in which work remained but
+    zero tokens were emitted and zero lifecycle transitions happened —
+    e.g. a queue gated behind a fully quarantined pool, or pathological
+    injected alloc-failure rates.  Failing loudly beats spinning forever;
+    the message carries the gating state so the operator can tell a
+    shrunk pool from a chaos knob."""
+
+
 def _pad_bucket(n: int, cap: int) -> int:
     """Round a prefill width up to a power of two (>= 8) so the number of
     distinct prefill compilations is O(log max_len), not O(#prompt-lens)."""
@@ -171,7 +197,9 @@ class ServeEngine:
                  max_len: int, extras: dict[str, Any] | None = None,
                  policy_engine: CachePolicyEngine | None = None,
                  chunk_size: int = 8, n_pages: int | None = None,
-                 max_queue: int | None = None):
+                 max_queue: int | None = None,
+                 journal_path: str | None = None,
+                 no_progress_limit: int = 256):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -206,20 +234,7 @@ class ServeEngine:
             self.pages_per_slot, self.n_pages = paged_kv_spec(
                 batch_slots, max_len, psz, n_pages
             )
-            # Chaos fault injection (DESIGN.md §5.5): with
-            # cfg.chaos_alloc_fail_p > 0 the pool refuses otherwise-
-            # satisfiable allocations with seeded probability, driving the
-            # same gating/preemption paths genuine exhaustion would.
-            if cfg.chaos_alloc_fail_p > 0.0:
-                assert cfg.chaos_alloc_fail_p < 1.0, (
-                    "chaos_alloc_fail_p must be < 1.0 or admission can "
-                    "never succeed"
-                )
-                self.allocator: PageAllocator = ChaosAllocator(
-                    self.n_pages, cfg.chaos_alloc_fail_p, cfg.chaos_seed
-                )
-            else:
-                self.allocator = PageAllocator(self.n_pages)
+            self.allocator: PageAllocator = self._make_allocator()
             self.page_table = np.full(
                 (batch_slots, self.pages_per_slot), -1, np.int32
             )
@@ -313,8 +328,36 @@ class ServeEngine:
         # must leave allocator/trie/page-table state exactly conserved.
         self._chaos = (
             cfg.chaos_preempt_p > 0.0
-            or (self.paged and cfg.chaos_alloc_fail_p > 0.0)
+            or (self.paged and (cfg.chaos_alloc_fail_p > 0.0
+                                or cfg.chaos_share_fail_p > 0.0
+                                or cfg.chaos_corrupt_p > 0.0))
         )
+        # Strict mode (DESIGN.md §5.6) arms the same per-wave sweep with
+        # no fault injection — CI tier-1 sets the env var so every test
+        # run audits conservation, not just the chaos legs.
+        self._strict = cfg.strict_invariants or (
+            os.environ.get("REPRO_STRICT_INVARIANTS", "") not in ("", "0")
+        )
+        # KV page integrity (DESIGN.md §5.6): fingerprints stamped at
+        # chunk boundaries over pages sealed below their slot's
+        # host-computed cursor; verify_pages() sweeps them every step.
+        self.integrity = self.paged and (
+            cfg.kv_integrity or cfg.chaos_corrupt_p > 0.0
+        )
+        self._page_fp: dict[int, int] = {}
+        self._corrupt_rng = (
+            np.random.default_rng(cfg.chaos_seed + 0x5EED)
+            if self.paged and cfg.chaos_corrupt_p > 0.0 else None
+        )
+        # Crash safety (DESIGN.md §5.6): optional fsync'd request journal;
+        # _replaying suppresses journal writes while restore re-enqueues.
+        self.journal_path = journal_path
+        self.journal = (
+            snap.RequestJournal(journal_path)
+            if journal_path is not None else None
+        )
+        self._replaying = False
+        self.no_progress_limit = max(1, no_progress_limit)
         self.stats = {
             "host_syncs": 0,          # total device->host barriers
             "decode_syncs": 0,        # one per decode chunk
@@ -337,7 +380,38 @@ class ServeEngine:
             "rejected": 0,            # submissions refused (AdmissionReject)
             "deadline_total": 0,      # deadlined requests reaching terminal
             "deadline_met": 0,        # ... that finished within deadline
+            "invariant_checks": 0,    # check_invariants() sweeps run
+            "integrity_sweeps": 0,    # fingerprint stamp+verify passes
+            "corrupted_pages": 0,     # fingerprint mismatches detected
+            "healed_requests": 0,     # slots recompute-restored after
+                                      # mapping a corrupted page
+            "injected_corruptions": 0,  # chaos_corrupt_p bit flips landed
+            "snapshots": 0,           # snapshot() calls
+            "restores": 0,            # restore() calls completed
         }
+
+    def _make_allocator(self) -> PageAllocator:
+        """Fresh pool allocator; the chaos wrapper when any injection knob
+        is armed (DESIGN.md §5.5) — with cfg.chaos_alloc_fail_p /
+        chaos_share_fail_p > 0 the pool refuses otherwise-satisfiable
+        calls with seeded probability, driving the same gating/preemption
+        paths genuine exhaustion would.  Also the restore path's reset
+        (``_hard_reset``), so a restored engine re-arms identically."""
+        cfg = self.cfg
+        if cfg.chaos_alloc_fail_p > 0.0 or cfg.chaos_share_fail_p > 0.0:
+            assert cfg.chaos_alloc_fail_p < 1.0, (
+                "chaos_alloc_fail_p must be < 1.0 or admission can "
+                "never succeed"
+            )
+            assert cfg.chaos_share_fail_p < 1.0, (
+                "chaos_share_fail_p must be < 1.0 or attaching heads can "
+                "never admit"
+            )
+            return ChaosAllocator(
+                self.n_pages, cfg.chaos_alloc_fail_p, cfg.chaos_seed,
+                share_fail_p=cfg.chaos_share_fail_p,
+            )
+        return PageAllocator(self.n_pages)
 
     # -- policy ------------------------------------------------------------
 
@@ -417,13 +491,39 @@ class ServeEngine:
             "chaos": {
                 "alloc_fail_p": self.cfg.chaos_alloc_fail_p,
                 "preempt_p": self.cfg.chaos_preempt_p,
+                "share_fail_p": self.cfg.chaos_share_fail_p,
+                "corrupt_p": self.cfg.chaos_corrupt_p,
+                "crash_after_wave": self.cfg.chaos_crash_after_wave,
                 "seed": self.cfg.chaos_seed,
                 "injected_alloc_failures": (
                     self.allocator.injected_failures
                     if self.paged
                     and isinstance(self.allocator, ChaosAllocator) else 0
                 ),
+                "injected_share_failures": (
+                    self.allocator.injected_share_failures
+                    if self.paged
+                    and isinstance(self.allocator, ChaosAllocator) else 0
+                ),
+                "injected_corruptions": self.stats["injected_corruptions"],
             },
+        }
+        # Crash safety + KV integrity (DESIGN.md §5.6) — same stability
+        # contract as "lifecycle": benches/CI parse it, tests pin keys.
+        report["integrity"] = {
+            "enabled": self.integrity,
+            "strict_invariants": self._strict,
+            "journal": self.journal_path is not None,
+            "stamped_pages": len(self._page_fp),
+            "quarantined_pages": (
+                len(self.allocator.quarantined_pages)
+                + len(self.allocator.doomed_pages)
+                if self.paged else 0
+            ),
+            "corrupted_pages": self.stats["corrupted_pages"],
+            "healed_requests": self.stats["healed_requests"],
+            "snapshots": self.stats["snapshots"],
+            "restores": self.stats["restores"],
         }
         if self.decode_plan is not None:
             report["decode_attention"] = {
@@ -734,13 +834,18 @@ class ServeEngine:
                     f"request needs {need} cache positions, "
                     f"max_len={self.max_len}"
                 ))
-            if self.paged and self._pages_needed(r) > self.n_pages:
+            if self.paged and self._pages_needed(r) > self.allocator.usable_pages():
                 # An over-pool request can NEVER be admitted; under the
                 # FIFO head-of-line gate it would queue forever and wedge
-                # everything behind it — reject at submit instead.
+                # everything behind it — reject at submit instead.  The
+                # bound is USABLE capacity: quarantined pages (DESIGN.md
+                # §5.6) never return to circulation.  (A pool that shrinks
+                # below an already-queued request's demand is the drain()
+                # watchdog's business.)
                 self._reject("pool_too_small", (
                     f"request needs {self._pages_needed(r)} pages, pool "
-                    f"has {self.n_pages} — it could never be admitted and "
+                    f"has {self.allocator.usable_pages()} usable of "
+                    f"{self.n_pages} — it could never be admitted and "
                     "would block the FIFO queue forever"
                 ))
             if r.id is not None:
@@ -769,6 +874,12 @@ class ServeEngine:
             r.submit_t = now
             r.status = "queued"
             self.queue.append(r)
+            if self.journal is not None and not self._replaying:
+                self.journal.append(snap.submit_event(r))
+        if self.journal is not None and not self._replaying:
+            # One fsync per submit batch: an accepted request is durable
+            # before the caller regains control.
+            self.journal.flush()
 
     def cancel(self, request_id: str) -> bool:
         """Request cancellation of a queued or resident request.  Takes
@@ -804,6 +915,12 @@ class ServeEngine:
             freed = self.allocator.release(self._slot_pages[slot])
             if self.prefix is not None and freed:
                 self.prefix.evict(freed)
+            for p in freed:
+                # A page leaving circulation (freed or quarantined) sheds
+                # its integrity stamp; its next holder re-stamps fresh
+                # bytes.  Pages still held by sharers keep theirs — their
+                # content is immutable below every sharer's cursor.
+                self._page_fp.pop(p, None)
             self._slot_pages[slot] = []
             self.page_table[slot] = -1
         self._dirty_slots.add(slot)
@@ -819,10 +936,14 @@ class ServeEngine:
             # An expired/cancelled deadlined request counts against
             # goodput: it reached terminal state without finishing.
             self.stats["deadline_total"] += 1
+        if self.journal is not None and not self._replaying:
+            self.journal.append(snap.terminal_event(r))
 
     def _finish(self, r: Request) -> None:
         r.done = True
         r.status = "finished"
+        if self.journal is not None and not self._replaying:
+            self.journal.append(snap.terminal_event(r))
         if r.deadline_s is not None:
             self.stats["deadline_total"] += 1
             if (r.submit_t is None
@@ -942,9 +1063,14 @@ class ServeEngine:
                 shared, shared_len = self._shared_prefix(eff, chunks)
             ids = self.allocator.alloc(need - len(shared))
             if ids is not None:
-                if shared:
-                    self.allocator.share(shared)
-                return shared + ids, chunks, shared_len
+                if not shared or self.allocator.share(shared):
+                    return shared + ids, chunks, shared_len
+                # Injected share refusal (ChaosAllocator): roll back the
+                # fresh alloc so the gated head leaves every refcount
+                # untouched — the same atomicity a failed alloc gives.
+                # The pages were never trie-registered or stamped, so the
+                # bare allocator release is the whole rollback.
+                self.allocator.release(ids)
             victim = self._pick_victim(head, wave_slots)
             if victim is None:
                 return None, None, 0
@@ -1028,7 +1154,7 @@ class ServeEngine:
         if stale:
             self.remaining = self.remaining.at[jnp.asarray(stale)].set(0)
         if not wave:
-            if self._chaos:
+            if self._chaos or self._strict:
                 self.check_invariants()
             return
         # Attached slots prefill only their unshared suffix (prefix_tokens
@@ -1112,7 +1238,7 @@ class ServeEngine:
                 r.ttft_s = now - r.admit_t
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
-        if self._chaos:
+        if self._chaos or self._strict:
             self.check_invariants()
 
     def _run_chunk(self) -> None:
@@ -1175,7 +1301,11 @@ class ServeEngine:
           references), and free + held partitions the pool — zero leaks;
         * the device-visible page-table rows mirror the host tables;
         * trie residency ⊆ held pages (no node outlives its storage).
+
+        With quarantine (DESIGN.md §5.6) the pool partition is
+        free + held + quarantined, and doomed pages are always held.
         """
+        self.stats["invariant_checks"] += 1
         queued = list(self.queue)
         for slot, r in enumerate(self.slot_req):
             if r is None:
@@ -1221,30 +1351,491 @@ class ServeEngine:
                 f"{self.allocator.ref_count(page)} != {refs} mapping slots"
             )
         free = self.allocator.free_pages
+        quar = self.allocator.quarantined_pages
         assert len(free) == len(set(free)) and not held & set(free)
-        assert sorted(list(free) + list(held)) == list(range(self.n_pages)), (
-            "free + held is not a partition of the pool"
+        assert not quar & held and not quar & set(free), (
+            f"quarantined pages back in circulation: "
+            f"{sorted(quar & (held | set(free)))}"
+        )
+        assert self.allocator.doomed_pages <= held, (
+            "doomed (pending-quarantine) pages must still be held"
+        )
+        assert (sorted(list(free) + list(held) + list(quar))
+                == list(range(self.n_pages))), (
+            "free + held + quarantined is not a partition of the pool"
+        )
+        assert not set(self._page_fp) - held, (
+            f"integrity stamps outlive their pages: "
+            f"{sorted(set(self._page_fp) - held)}"
         )
         if self.prefix is not None:
             stray = self.prefix.resident_pages() - held
             assert not stray, f"trie nodes outlive their pages: {stray}"
 
+    # -- KV page integrity (DESIGN.md §5.6) --------------------------------
+
+    def _pool_leaf_ids(self, leaves: list) -> list[int]:
+        """Indices of the paged K/V pool leaves in the flattened cache:
+        the arrays whose trailing axes are (n_pages, page_size, heads,
+        head_dim).  Slot-indexed leaves (contiguous cross K/V, recurrent
+        state, the page table itself) never carry that pair of axes."""
+        return [
+            i for i, x in enumerate(leaves)
+            if hasattr(x, "ndim") and x.ndim >= 4
+            and x.shape[-4] == self.n_pages
+            and x.shape[-3] == self.page_size
+            and jnp.issubdtype(x.dtype, jnp.floating)
+        ]
+
+    def _fingerprint_pages(self, pages, pools=None) -> dict[int, int]:
+        """CRC32 per page over the concatenated bytes of every pool leaf's
+        page slice — cheap, deterministic, and sensitive to any single
+        flipped value.  One host sync pulls the pools unless the caller
+        already did (``pools``)."""
+        if pools is None:
+            leaves = jax.tree_util.tree_leaves(self.cache)
+            pools = [np.asarray(leaves[i]) for i in self._pool_leaf_ids(leaves)]
+            self.stats["host_syncs"] += 1
+        out = {}
+        for p in pages:
+            c = 0
+            for pool in pools:
+                c = zlib.crc32(
+                    np.ascontiguousarray(pool[..., p, :, :, :]).tobytes(), c
+                )
+            out[p] = c
+        return out
+
+    def _sealed_pages(self) -> set[int]:
+        """Pages wholly below some resident slot's host-computed write
+        cursor (len(prompt) + len(generated) - 1 — the §5.5 cursor
+        identity).  Sealed content is immutable: per-slot cursors are
+        monotone for the life of a residency (spec rollback rewinds only
+        within the current round's window, never below a chunk boundary),
+        and shared pages sit below EVERY sharer's cursor by construction."""
+        sealed: set[int] = set()
+        for slot, r in self._live():
+            cur = len(r.prompt) + len(r.generated) - 1
+            sealed.update(self._slot_pages[slot][: cur // self.page_size])
+        return sealed
+
+    def _corrupt_page(self, page: int) -> None:
+        """Chaos bit-flip: perturb one element of ``page`` in the first
+        pool leaf (every leading stack entry, so any layer's read would
+        expose it).  Device-side, exactly like real HBM corruption."""
+        leaves, treedef = jax.tree_util.tree_flatten(self.cache)
+        i = self._pool_leaf_ids(leaves)[0]
+        leaves[i] = leaves[i].at[..., page, 0, 0, 0].add(1)
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _integrity_sweep(self) -> list[int]:
+        """Chunk-boundary integrity pass: stamp newly sealed pages, land
+        any injected corruption (chaos_corrupt_p), then verify every
+        stamp.  Ordering matters: corruption is injected AFTER stamping
+        and BEFORE verification, so a flipped page is detected and healed
+        before any subsequent chunk could read it — which is what keeps
+        chaos corruption runs bit-identical."""
+        self.stats["integrity_sweeps"] += 1
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        pools = [np.asarray(leaves[i]) for i in self._pool_leaf_ids(leaves)]
+        self.stats["host_syncs"] += 1
+        new = self._sealed_pages() - self._page_fp.keys()
+        if new:
+            self._page_fp.update(
+                self._fingerprint_pages(sorted(new), pools=pools)
+            )
+        if (self._corrupt_rng is not None and self._page_fp
+                and self._corrupt_rng.random() < self.cfg.chaos_corrupt_p):
+            stamped = sorted(self._page_fp)
+            victim = stamped[int(self._corrupt_rng.integers(len(stamped)))]
+            self._corrupt_page(victim)
+            self.stats["injected_corruptions"] += 1
+            pools = None     # device bytes changed; verify must re-pull
+        return self.verify_pages(_pools=pools)
+
+    def verify_pages(self, _pools=None) -> list[int]:
+        """Re-fingerprint every stamped page; quarantine mismatches and
+        self-heal by recompute-restore (DESIGN.md §5.6).
+
+        A corrupted page is quarantined in the allocator (a held page is
+        doomed: it leaves circulation at its last release, never the free
+        list), then EVERY slot whose table maps it is preempted — the
+        refcount-aware release tears all sharers off the bad page, and
+        re-admission recomputes their KV into healthy pages from host
+        truth, bit-identically.  Victims re-enter the queue oldest-first
+        (descending-admit_seq appendleft), preserving arrival order.
+        Returns the corrupted page ids."""
+        if not self.paged or not self._page_fp:
+            return []
+        current = self._fingerprint_pages(sorted(self._page_fp), pools=_pools)
+        bad = sorted(
+            p for p, fp in self._page_fp.items() if current[p] != fp
+        )
+        if not bad:
+            return []
+        for p in bad:
+            self._page_fp.pop(p)
+            self.stats["corrupted_pages"] += 1
+            self.allocator.quarantine(p)
+        badset = set(bad)
+        victims = [
+            r for slot, r in self._live()
+            if badset & set(self._slot_pages[slot])
+        ]
+        # Corruption healing is exempt from the once-only victim guard —
+        # a slot reading poisoned KV must be restored no matter its
+        # preemption history.
+        for r in sorted(victims, key=lambda r: r.admit_seq, reverse=True):
+            self.stats["healed_requests"] += 1
+            self._preempt(r)
+        if self._chaos or self._strict:
+            self.check_invariants()
+        return bad
+
+    # -- snapshot / restore (DESIGN.md §5.6) -------------------------------
+
+    def request(self, request_id: str) -> Request | None:
+        """Live handle for a submitted request id (terminal ones kept)."""
+        return self._by_id.get(request_id)
+
+    def results(self) -> dict[str, list[int]]:
+        """Emitted tokens per known request id — the stream-identity view
+        the recovery gates compare."""
+        return {rid: list(r.generated) for rid, r in self._by_id.items()}
+
+    def snapshot(self, path: str) -> dict:
+        """Serialize host-side truth to ``path`` (atomic, checksummed).
+
+        Nothing device-resident is saved: the §5.5 restore-identity
+        invariant makes every KV byte recomputable from (prompt, emitted
+        tokens, seed, token index), so in-flight requests are recorded as
+        re-queueable work and terminal requests keep their streams.  The
+        journal offset recorded here is where replay resumes after an
+        unplanned kill.  Callers invoke it between steps (chunk
+        boundaries) — exactly where all host state is consistent."""
+        self.stats["snapshots"] += 1
+        residents = sorted(
+            (r for _, r in self._live()), key=lambda r: r.admit_seq
+        )
+        queued = list(self.queue)
+        terminal = [r for r in self._by_id.values() if r.done]
+        records = (
+            [snap.request_record(r) for r in terminal]
+            # Residents re-enter as "preempted": re-queued work with
+            # tokens already emitted.  Their crash-eviction does NOT
+            # consume the anti-livelock budget (preempted_n untouched).
+            + [snap.request_record(r, status="preempted") for r in residents]
+            + [snap.request_record(r) for r in queued]
+        )
+        alloc = None
+        if self.paged:
+            alloc = {
+                "refcounts": {
+                    str(p): self.allocator.ref_count(p)
+                    for p in sorted(self.allocator.held_pages)
+                },
+                "quarantined": sorted(self.allocator.quarantined_pages),
+                "doomed": sorted(self.allocator.doomed_pages),
+                "page_tables": {
+                    str(slot): list(self._slot_pages[slot])
+                    for slot in range(self.slots)
+                    if self._slot_pages[slot]
+                },
+            }
+        payload = {
+            "cfg": snap.cfg_fingerprint(self.cfg),
+            "geometry": {
+                "slots": self.slots,
+                "max_len": self.max_len,
+                "paged": self.paged,
+                "page_size": self.page_size if self.paged else None,
+                "n_pages": self.n_pages if self.paged else None,
+            },
+            "counters": {
+                "next_id": self._next_id, "admit_seq": self._admit_seq,
+            },
+            "stats": dict(self.stats),
+            "requests": records,
+            "allocator": alloc,
+            "journal": {
+                "path": self.journal_path,
+                "offset": (
+                    self.journal.offset() if self.journal is not None else 0
+                ),
+            },
+        }
+        snap.write_snapshot(path, payload)
+        return {
+            "path": path,
+            "requests": len(records),
+            "in_flight": len(residents) + len(queued),
+        }
+
+    @staticmethod
+    def _audit_snapshot(payload: dict) -> None:
+        """Cross-check the snapshot's allocator section against its page
+        tables — a snapshot whose refcounts don't equal the number of
+        mapping tables was corrupt at WRITE time and must not restore."""
+        alloc = payload.get("allocator")
+        if not alloc:
+            return
+        mapped: collections.Counter[int] = collections.Counter()
+        for pages in alloc["page_tables"].values():
+            mapped.update(pages)
+        refs = {int(p): n for p, n in alloc["refcounts"].items()}
+        if refs != dict(mapped):
+            raise SnapshotError("inconsistent", (
+                "snapshot refcounts disagree with its page tables: "
+                f"refcounts={refs} mapped={dict(mapped)}"
+            ))
+
+    def _request_from_record(self, rec: dict, now: float) -> Request:
+        r = Request(
+            prompt=np.asarray(rec["prompt"], np.int32),
+            max_new_tokens=rec["max_new_tokens"],
+            seed=rec["seed"],
+            id=rec["id"],
+            deadline_s=rec["deadline_s"],
+            max_queue_wait_s=rec["max_queue_wait_s"],
+        )
+        r.generated = list(rec["generated"])
+        r.status = rec["status"]
+        r.preempted_n = rec["preempted_n"]
+        r.cancel_requested = rec["cancel_requested"]
+        r.ttft_s = rec["ttft_s"]
+        r.queue_wait_s = rec["queue_wait_s"]
+        r.done = rec["status"] in ("finished", "cancelled", "expired")
+        if not r.done:
+            # SLO clocks restart at recovery: wall time spent dead isn't
+            # chargeable to the request's deadline.
+            r.submit_t = now
+        return r
+
+    def _hard_reset(self) -> None:
+        """Discard ALL engine state — device buffers, slots, queue,
+        allocator, trie, stamps, counters — returning to the just-
+        constructed blank.  The jitted dispatches survive (same shapes),
+        so a restore re-uses every compilation."""
+        b = self.slots
+        self.cache = self.model.init_cache(
+            self.params, batch=b, max_len=self.max_len, **self._cache_kwargs
+        )
+        self.cur_tok = jnp.zeros((b,), jnp.int32)
+        self.remaining = jnp.zeros((b,), jnp.int32)
+        self.tok_idx = jnp.zeros((b,), jnp.int32)
+        self.seeds = jnp.zeros((b,), jnp.int32)
+        self.hist = jnp.zeros((b, self.max_len + 1), jnp.int32)
+        self.hist_len = jnp.zeros((b,), jnp.int32)
+        self.slot_req = [None] * b
+        self.queue = collections.deque()
+        self._by_id = {}
+        self._next_id = 0
+        self._admit_seq = 0
+        self._dirty_slots = set()
+        self._page_fp = {}
+        if self.paged:
+            self.allocator = self._make_allocator()
+            self.page_table = np.full((b, self.pages_per_slot), -1, np.int32)
+            self._slot_pages = [[] for _ in range(b)]
+            if self.prefix is not None:
+                self.prefix = PrefixIndex(self.page_size)
+        for k in self.stats:
+            self.stats[k] = 0
+
+    def restore(self, path: str | None = None) -> dict:
+        """Rebuild the engine from a snapshot and/or the request journal.
+
+        Validates BEFORE discarding anything: a corrupt/mismatched
+        snapshot raises a typed ``SnapshotError`` and leaves the live
+        engine untouched.  Then hard-resets, re-installs the quarantine
+        set, re-enqueues every in-flight request (snapshot residents
+        first, in admission order, then the queue — global arrival
+        order), and replays the journal suffix past the snapshot's
+        offset: unknown submits re-enter the queue, journaled terminal
+        events re-retire their requests with the exact tokens they had
+        emitted.  ``path=None`` replays the whole journal (snapshotless
+        recovery).  Device KV is rebuilt entirely by the ordinary
+        recompute-prefill admission path, so the restored streams are
+        bit-identical to the uninterrupted run (§5.5/§5.6)."""
+        if path is None and self.journal_path is None:
+            raise SnapshotError(
+                "no_source", "restore() needs a snapshot path or a journal"
+            )
+        payload = None
+        if path is not None:
+            payload = snap.load_snapshot(path)
+            mine = snap.cfg_fingerprint(self.cfg)
+            if payload.get("cfg") != mine:
+                drift = sorted(
+                    k for k in set(mine) | set(payload.get("cfg") or {})
+                    if mine.get(k) != (payload.get("cfg") or {}).get(k)
+                )
+                raise SnapshotError("config_mismatch", (
+                    f"snapshot was taken under a different config: {drift}"
+                ))
+            geo = {
+                "slots": self.slots,
+                "max_len": self.max_len,
+                "paged": self.paged,
+                "page_size": self.page_size if self.paged else None,
+                "n_pages": self.n_pages if self.paged else None,
+            }
+            if payload.get("geometry") != geo:
+                raise SnapshotError("geometry_mismatch", (
+                    f"snapshot geometry {payload.get('geometry')} != "
+                    f"engine geometry {geo}"
+                ))
+            self._audit_snapshot(payload)
+        self._hard_reset()
+        now = time.perf_counter()
+        restored = replayed = 0
+        journal_offset = 0
+        self._replaying = True
+        try:
+            if payload is not None:
+                self._next_id = payload["counters"]["next_id"]
+                self._admit_seq = payload["counters"]["admit_seq"]
+                for k, v in payload["stats"].items():
+                    if k in self.stats:
+                        self.stats[k] = v
+                alloc = payload.get("allocator")
+                if self.paged and alloc:
+                    # Doomed pages' holders died with the crash: they are
+                    # quarantined outright (refcount 0 now).
+                    for p in alloc["quarantined"] + alloc["doomed"]:
+                        self.allocator.quarantine(p)
+                for rec in payload["requests"]:
+                    r = self._request_from_record(rec, now)
+                    self._by_id[r.id] = r
+                    if not r.done:
+                        self.queue.append(r)
+                        restored += 1
+                journal_offset = (payload.get("journal") or {}).get(
+                    "offset", 0
+                )
+            if (self.journal_path is not None
+                    and os.path.exists(self.journal_path)):
+                for ev in snap.RequestJournal.replay(
+                        self.journal_path, journal_offset):
+                    replayed += 1
+                    if ev.get("ev") == "submit":
+                        if ev["id"] in self._by_id:
+                            continue
+                        r = Request(
+                            prompt=np.asarray(ev["prompt"], np.int32),
+                            max_new_tokens=ev["max_new_tokens"],
+                            seed=ev["seed"],
+                            id=ev["id"],
+                            deadline_s=ev["deadline_s"],
+                            max_queue_wait_s=ev["max_queue_wait_s"],
+                        )
+                        r.status = "queued"
+                        r.submit_t = now
+                        self._by_id[r.id] = r
+                        self.queue.append(r)
+                        restored += 1
+                    elif ev.get("ev") == "terminal":
+                        r = self._by_id.get(ev["id"])
+                        if r is None:
+                            continue
+                        if not r.done and any(
+                                q is r for q in self.queue):
+                            self.queue = collections.deque(
+                                q for q in self.queue if q is not r
+                            )
+                            restored -= 1
+                        r.generated = list(ev["generated"])
+                        r.status = ev["status"]
+                        r.done = True
+        finally:
+            self._replaying = False
+        self.stats["restores"] += 1
+        if self._chaos or self._strict:
+            self.check_invariants()
+        return {
+            "restored": restored,
+            "replayed_events": replayed,
+            "terminal": sum(1 for r in self._by_id.values() if r.done),
+        }
+
+    # -- scheduler loop ----------------------------------------------------
+
     def step(self) -> bool:
         """One scheduler tick: lifecycle sweep (cancel/expire), admission
-        (with preemption), then one decode chunk if anything is resident.
-        Returns True while work remains — callers interleave ``cancel()``
-        / ``submit()`` with ``step()`` for mid-stream control."""
+        (with preemption), one decode chunk if anything is resident, then
+        the integrity sweep and a journal flush — so every step ends on a
+        durable, verified chunk boundary.  Returns True while work
+        remains — callers interleave ``cancel()`` / ``submit()`` with
+        ``step()`` for mid-stream control."""
         self._sweep_lifecycle()
         self._admit_wave()
         if self.slot_req.count(None) < self.slots:
             (self._run_spec_chunk if self.spec else self._run_chunk)()
+        if self.integrity:
+            self._integrity_sweep()
+        if self.journal is not None:
+            self.journal.flush()
+        if (self.cfg.chaos_crash_after_wave > 0
+                and self.stats["admission_waves"]
+                >= self.cfg.chaos_crash_after_wave):
+            # Injected kill (DESIGN.md §5.6): the journal is flushed and
+            # every host structure sits at a chunk boundary — exactly
+            # the state an external SIGKILL between steps would leave on
+            # disk.  The engine object is dead; recovery restores a
+            # fresh one from snapshot + journal.
+            raise ChaosCrash(self.stats["admission_waves"])
         return bool(self.queue) or self.slot_req.count(None) < self.slots
+
+    def _progress_marker(self) -> tuple:
+        """Observable progress: tokens emitted or lifecycle transitions.
+        Anything that changes one of these is forward motion; a step that
+        changes none was pure spin."""
+        s = self.stats
+        return (s["decode_tokens"], s["prefill_tokens"], s["preempted"],
+                s["cancelled"], s["expired"])
 
     def drain(self) -> None:
         """Run the scheduler until no work remains (all requests reach a
-        terminal state: finished, cancelled or expired)."""
-        while self.step():
-            pass
+        terminal state: finished, cancelled or expired).
+
+        Watchdog (DESIGN.md §5.6): ``no_progress_limit`` consecutive
+        zero-progress steps with work still pending raise a typed
+        ``NoProgressError`` instead of spinning forever — the failure
+        mode of a queue gated behind a quarantine-shrunk pool, or of
+        pathological injected alloc/share-failure rates."""
+        idle = 0
+        while True:
+            before = self._progress_marker()
+            if not self.step():
+                return
+            if self._progress_marker() != before:
+                idle = 0
+                continue
+            idle += 1
+            if idle >= self.no_progress_limit:
+                gating = {
+                    "queued": len(self.queue),
+                    "resident": sum(
+                        1 for r in self.slot_req if r is not None
+                    ),
+                    "free_pages": (
+                        self.allocator.free_count() if self.paged else None
+                    ),
+                    "usable_pages": (
+                        self.allocator.usable_pages() if self.paged else None
+                    ),
+                    "quarantined": (
+                        len(self.allocator.quarantined_pages)
+                        + len(self.allocator.doomed_pages)
+                        if self.paged else 0
+                    ),
+                    "chaos_alloc_fail_p": self.cfg.chaos_alloc_fail_p,
+                    "chaos_share_fail_p": self.cfg.chaos_share_fail_p,
+                }
+                raise NoProgressError(
+                    f"drain() made no progress for {idle} consecutive "
+                    f"steps: {gating}"
+                )
 
     def run(self, requests: list[Request]) -> list[Request]:
         self.submit(requests)

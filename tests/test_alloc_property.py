@@ -12,6 +12,12 @@ a partition of the pool), and never over-commit (alloc yields None,
 atomically, instead of dipping below zero free pages) — the "admission
 never exceeds free pages" gate, with or without sharing.
 
+KV integrity (DESIGN.md §5.6) adds ``quarantine``: a free page leaves
+service immediately; a held page is doomed and diverts to quarantine at
+its LAST release (never the free list).  The machines interleave
+quarantines with everything else, so the partition invariant becomes
+free + held + quarantined == pool with doomed ⊆ held throughout.
+
 CI runs these under the derandomized ``ci`` hypothesis profile
 (tests/conftest.py); skips gracefully when hypothesis is absent (see
 requirements-dev.txt).
@@ -126,6 +132,8 @@ class RefcountedAllocatorMachine(RuleBasedStateMachine):
         self.alloc = PageAllocator(_POOL)
         self.mirror: dict[int, int] = {}     # page -> expected refcount
         self.handles: list[list[int]] = []
+        self.quarantined: set[int] = set()   # out of service now
+        self.doomed: set[int] = set()        # held; diverts at last release
 
     @rule(n=st.integers(min_value=0, max_value=_POOL + 2))
     def do_alloc(self, n):
@@ -170,6 +178,24 @@ class RefcountedAllocatorMachine(RuleBasedStateMachine):
             self.mirror[i] -= 1
             if not self.mirror[i]:
                 del self.mirror[i]
+        for i in freed:
+            # A doomed page's last release diverts it to quarantine; the
+            # caller still sees it in `freed` (drives trie eviction).
+            if i in self.doomed:
+                self.doomed.discard(i)
+                self.quarantined.add(i)
+
+    @rule(data=st.data())
+    def do_quarantine(self, data):
+        page = data.draw(st.integers(0, _POOL - 1), label="page")
+        expect = page not in self.quarantined and page not in self.doomed
+        assert self.alloc.quarantine(page) is expect   # idempotent
+        if not expect:
+            return
+        if page in self.mirror:
+            self.doomed.add(page)        # held: leaves service at release
+        else:
+            self.quarantined.add(page)   # free: leaves service now
 
     @invariant()
     def refcounts_conserved(self):
@@ -179,8 +205,16 @@ class RefcountedAllocatorMachine(RuleBasedStateMachine):
         for i, refs in self.mirror.items():
             assert self.alloc.ref_count(i) == refs
         assert not held & set(free), "page simultaneously free and held"
-        assert sorted(list(free) + list(held)) == list(range(_POOL)), (
-            "free + held is not a partition of the pool"
+        assert self.alloc.quarantined_pages == self.quarantined
+        assert self.alloc.doomed_pages == self.doomed
+        assert self.doomed <= held, "doomed page is not held"
+        assert not self.quarantined & (held | set(free))
+        assert sorted(list(free) + list(held) + sorted(self.quarantined)) \
+            == list(range(_POOL)), (
+            "free + held + quarantined is not a partition of the pool"
+        )
+        assert self.alloc.usable_pages() == (
+            _POOL - len(self.quarantined) - len(self.doomed)
         )
         assert len(held) <= _POOL
 
@@ -201,7 +235,8 @@ class ChaosAllocatorMachine(RefcountedAllocatorMachine):
     def __init__(self):
         super().__init__()
         from repro.serve.chaos import ChaosAllocator
-        self.alloc = ChaosAllocator(_POOL, fail_p=0.35, seed=11)
+        self.alloc = ChaosAllocator(_POOL, fail_p=0.35, seed=11,
+                                    share_fail_p=0.35)
 
     @rule(n=st.integers(min_value=0, max_value=_POOL + 2))
     def do_alloc(self, n):
@@ -222,6 +257,25 @@ class ChaosAllocatorMachine(RefcountedAllocatorMachine):
                 assert i not in self.mirror, "page handed out twice"
                 self.mirror[i] = 1
             self.handles.append(list(ids))
+
+    @rule(data=st.data())
+    def do_share(self, data):
+        if not self.handles:
+            return
+        ids = self.handles[
+            data.draw(st.integers(0, len(self.handles) - 1), label="handle")
+        ]
+        before_refs = self.alloc.total_refs()
+        if self.alloc.share(ids):
+            assert not self.alloc.last_injected
+            for i in ids:
+                self.mirror[i] += 1
+            self.handles.append(list(ids))
+        else:
+            # Injected refusal (only possible on a non-empty share): as
+            # atomic as a genuine alloc failure — no refcount perturbed.
+            assert ids and self.alloc.last_injected
+            assert self.alloc.total_refs() == before_refs
 
 
 ChaosAllocatorMachine.TestCase.settings = settings(
@@ -283,3 +337,41 @@ def test_free_rejects_unheld_pages():
 def test_alloc_negative_rejected():
     with pytest.raises(ValueError):
         PageAllocator(4).alloc(-1)
+
+
+def test_quarantine_lifecycle():
+    """Quarantine semantics (DESIGN.md §5.6): free pages leave service
+    immediately, held pages are doomed and divert at their LAST release
+    (still reported in `freed` so the engine's trie/stamp cleanup runs),
+    and a quarantined page never re-enters the free list."""
+    alloc = PageAllocator(4)
+    ids = alloc.alloc(2)
+    free_page = next(p for p in range(4) if p not in ids)
+    assert alloc.quarantine(free_page)
+    assert alloc.quarantined_pages == {free_page}
+    assert not alloc.quarantine(free_page)           # idempotent: False
+    assert alloc.usable_pages() == 3
+
+    assert alloc.quarantine(ids[0])                  # held -> doomed
+    assert alloc.doomed_pages == {ids[0]}
+    assert ids[0] in alloc.held_pages                # still held for now
+    assert alloc.usable_pages() == 2
+    assert not alloc.quarantine(ids[0])              # already doomed
+
+    alloc.share(ids)
+    assert alloc.release(ids) == []                  # refs remain
+    freed = alloc.release(ids)                       # last ref drops
+    assert sorted(freed) == sorted(ids)              # caller sees both
+    assert ids[0] in alloc.quarantined_pages         # ...but one diverted
+    assert not alloc.doomed_pages
+    assert ids[1] in alloc.free_pages
+    assert ids[0] not in alloc.free_pages
+    assert alloc.usable_pages() == 2
+
+    with pytest.raises(ValueError):
+        alloc.quarantine(99)
+    # Quarantined pages are unreachable: the pool can still hand out
+    # exactly the usable remainder and no more.
+    got = alloc.alloc(2)
+    assert got is not None and not (set(got) & alloc.quarantined_pages)
+    assert alloc.alloc(1) is None

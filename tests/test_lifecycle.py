@@ -337,7 +337,7 @@ def test_policy_report_schema_stable():
     assert set(report) == {
         "kv_bytes_per_layer", "kv_residency", "cache_layout", "sampling",
         "plan_cache", "speculative", "paged_kv", "prefix_sharing",
-        "lifecycle", "decode_attention",
+        "lifecycle", "integrity", "decode_attention",
     }
     assert set(report["lifecycle"]) == {
         "preemption_enabled", "max_queue", "preempted", "preempted_forced",
@@ -345,12 +345,110 @@ def test_policy_report_schema_stable():
         "goodput_under_deadline", "chaos",
     }
     assert set(report["lifecycle"]["chaos"]) == {
-        "alloc_fail_p", "preempt_p", "seed", "injected_alloc_failures",
+        "alloc_fail_p", "preempt_p", "share_fail_p", "corrupt_p",
+        "crash_after_wave", "seed", "injected_alloc_failures",
+        "injected_share_failures", "injected_corruptions",
+    }
+    assert set(report["integrity"]) == {
+        "enabled", "strict_invariants", "journal", "stamped_pages",
+        "quarantined_pages", "corrupted_pages", "healed_requests",
+        "snapshots", "restores",
     }
     stats = eng.serve_stats()
     assert {
         "preempted", "preempted_forced", "recompute_tokens", "cancelled",
         "expired", "rejected", "deadline_total", "deadline_met",
-        "goodput_under_deadline",
+        "goodput_under_deadline", "invariant_checks", "integrity_sweeps",
+        "corrupted_pages", "healed_requests", "snapshots", "restores",
     } <= set(stats)
     assert stats["goodput_under_deadline"] == 1.0    # vacuous: no SLOs yet
+
+
+def test_chaos_share_failures_identity_and_zero_leaks():
+    """Satellite: seeded SHARE refusals (the alloc-own-then-share
+    admission ordering's second failure point) roll back the head's
+    fresh allocation atomically — no refcount perturbed — and the run
+    stays bit-identical to the fault-free run with zero leaked pages."""
+    cfg = dataclasses.replace(
+        _paged(get_config("yi-9b", smoke=True)), prefix_sharing=True
+    )
+    params = build_model(cfg).init(jax.random.PRNGKey(9))
+    rng = np.random.default_rng(17)
+    common = rng.integers(0, cfg.vocab, size=17).astype(np.int32)
+    spec_reqs = lambda: [  # noqa: E731
+        Request(prompt=common.copy(), max_new_tokens=5, seed=1),
+        Request(prompt=np.concatenate(
+            [common, rng.integers(0, cfg.vocab, size=2).astype(np.int32)]
+        ), max_new_tokens=5, seed=2),       # attaches to A's prefix pages
+        Request(prompt=common.copy(), max_new_tokens=4, seed=3),
+    ]
+    rng = np.random.default_rng(17)         # same prompts both runs
+    ref = spec_reqs()
+    rng = np.random.default_rng(17)
+    got = spec_reqs()
+    _run_engine(cfg, params, ref)
+    chaos_cfg = dataclasses.replace(cfg, chaos_share_fail_p=0.6,
+                                    chaos_seed=1)
+    eng = _run_engine(chaos_cfg, params, got)
+    assert eng.allocator.injected_share_failures >= 1, "chaos never fired"
+    for r, rr in zip(got, ref):
+        assert r.generated == rr.generated, "share refusal changed output"
+    assert sorted(eng.free_pages) == list(range(eng.n_pages))
+    eng.check_invariants()
+
+
+def test_chaos_share_refusal_is_atomic():
+    """ChaosAllocator.share unit: an injected refusal returns False
+    having touched NO refcount, share([]) is never injected, and the
+    injection pattern is reproducible from the seed."""
+    from repro.serve.chaos import ChaosAllocator
+
+    def pattern(seed):
+        alloc = ChaosAllocator(8, fail_p=0.0, seed=seed, share_fail_p=0.5)
+        base = alloc.alloc(3)
+        out = []
+        for _ in range(12):
+            refs_before = {p: alloc.ref_count(p) for p in alloc.held_pages}
+            ok = alloc.share(base)
+            out.append(ok)
+            if not ok:
+                assert alloc.last_injected
+                assert {p: alloc.ref_count(p)
+                        for p in alloc.held_pages} == refs_before
+            else:
+                alloc.release(base)
+        return out
+
+    assert pattern(5) == pattern(5)
+    assert any(pattern(5)) and not all(pattern(5))
+    assert pattern(5) != pattern(6)
+
+    alloc = ChaosAllocator(4, fail_p=0.0, seed=0, share_fail_p=1.0 - 1e-12)
+    for _ in range(16):
+        assert alloc.share([]) is True       # no-op: never injected
+        assert not alloc.last_injected
+    assert alloc.injected_share_failures == 0
+
+
+def test_strict_invariants_runs_without_chaos(monkeypatch):
+    """Satellite: cfg.strict_invariants (or the REPRO_STRICT_INVARIANTS
+    env var CI sets) arms the per-wave check_invariants() sweep with no
+    chaos knob on; without either, no per-wave check runs."""
+    cfg = _paged(get_config("yi-9b", smoke=True))
+    params = build_model(cfg).init(jax.random.PRNGKey(10))
+    reqs = lambda: _reqs(cfg, [(5, 4), (4, 3)], seed=2)  # noqa: E731
+
+    monkeypatch.delenv("REPRO_STRICT_INVARIANTS", raising=False)
+    eng = _run_engine(cfg, params, reqs())
+    assert eng.stats["invariant_checks"] == 0
+
+    strict = dataclasses.replace(cfg, strict_invariants=True)
+    eng = _run_engine(strict, params, reqs())
+    assert eng.stats["invariant_checks"] >= 1
+
+    monkeypatch.setenv("REPRO_STRICT_INVARIANTS", "1")
+    eng = _run_engine(cfg, params, reqs())
+    assert eng.stats["invariant_checks"] >= 1
+    monkeypatch.setenv("REPRO_STRICT_INVARIANTS", "0")   # "0" disarms
+    eng = _run_engine(cfg, params, reqs())
+    assert eng.stats["invariant_checks"] == 0

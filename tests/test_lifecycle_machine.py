@@ -1,14 +1,18 @@
 """Hypothesis state machine for the request lifecycle (DESIGN.md §5.5).
 
-Random submit / cancel / expire / step interleavings against a REAL tiny
-``ServeEngine`` with chaos knobs armed — step() internally exercises
-preemption, seeded alloc refusals and forced preemptions — asserting the
-full engine/allocator/trie conservation invariant after every rule.
+Random submit / cancel / expire / step / kill+restore interleavings
+against a REAL tiny ``ServeEngine`` with chaos knobs armed — step()
+internally exercises preemption, seeded alloc refusals and forced
+preemptions, and the kill rule snapshots + hard-resets + restores the
+engine mid-example (DESIGN.md §5.6) — asserting the full
+engine/allocator/trie conservation invariant after every rule.
 Separate from ``test_lifecycle`` so the deterministic lifecycle tests
 still run when hypothesis is absent (this module then skips, like
 ``test_alloc_property``; see requirements-dev.txt).
 """
 import dataclasses
+import os
+import tempfile
 
 import jax
 import numpy as np
@@ -96,6 +100,21 @@ class LifecycleMachine(RuleBasedStateMachine):
     @rule()
     def do_step(self):
         self.eng.step()
+
+    @rule()
+    def do_kill_and_restore(self):
+        """In-process kill: snapshot host truth, discard EVERY device
+        buffer and host structure via restore (which hard-resets before
+        re-enqueueing), and continue the example on the rebuilt state.
+        restore() constructs NEW Request objects, so the machine re-syncs
+        its handles by id — exactly what a recovering client does."""
+        path = os.path.join(
+            tempfile.gettempdir(), f"lifecycle-machine-{os.getpid()}.json"
+        )
+        self.eng.snapshot(path)
+        self.eng.restore(path)
+        self.inflight = [self.eng.request(r.id) for r in self.inflight]
+        assert all(r is not None for r in self.inflight)
 
     @invariant()
     def conserved(self):

@@ -1,0 +1,327 @@
+"""Crash-safe serving tests (DESIGN.md §5.6).
+
+The tentpole claims: (1) ``snapshot()`` serializes only host-side truth
+and ``restore()`` rebuilds all device KV bit-identically via the same
+recompute-prefill path preemption uses, so a run killed mid-wave and
+restored into a FRESH engine finishes with exactly the streams of an
+uninterrupted run; (2) the append-only fsync'd request journal makes
+recovery possible with no snapshot at all — replaying submits + terminal
+events past the last flushed chunk boundary; (3) a corrupted/mismatched
+snapshot is rejected with a typed ``SnapshotError`` BEFORE any live
+state is discarded; (4) quarantined pages stay quarantined across
+restore; (5) ``drain()``'s watchdog converts a zero-progress livelock
+into a typed ``NoProgressError`` instead of a silent spin.
+
+All engines here share one params tree (one compile per dispatch shape);
+workload copies are regenerated per run so identity comparisons are
+between independent Request objects.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serve.chaos import ChaosCrash
+from repro.serve.engine import NoProgressError, Request, ServeEngine
+from repro.serve.snapshot import (
+    RequestJournal,
+    SnapshotError,
+    load_snapshot,
+    write_snapshot,
+)
+
+_PRESSURE = [(6, 6), (10, 8), (5, 8)]
+
+
+def _cfg(**kw):
+    base = dataclasses.replace(
+        get_config("yi-9b", smoke=True), cache_layout="paged",
+        kv_page_size=8,
+    )
+    return dataclasses.replace(base, **kw) if kw else base
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(_cfg()).init(jax.random.PRNGKey(0))
+
+
+def _reqs(cfg, spec=_PRESSURE, seed=0, rng_seed=3):
+    rng = np.random.default_rng(rng_seed)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                max_new_tokens=m, seed=seed)
+        for n, m in spec
+    ]
+
+
+def _engine(cfg, params, **kw):
+    return ServeEngine(cfg, params, batch_slots=2, max_len=32,
+                       chunk_size=2, **kw)
+
+
+def _reference(cfg, params, **req_kw):
+    ref = _reqs(cfg, **req_kw)
+    eng = _engine(cfg, params)
+    eng.run(ref)
+    return {r.id: list(r.generated) for r in ref}
+
+
+def _assert_zero_leaks(eng):
+    free = sorted(eng.free_pages)
+    quar = sorted(eng.allocator.quarantined_pages)
+    assert sorted(free + quar) == list(range(eng.n_pages)), (free, quar)
+    eng.check_invariants()
+
+
+@pytest.mark.parametrize("sharing", [False, True])
+def test_snapshot_restore_mid_wave_identity(sharing, params, tmp_path):
+    """Tentpole gate: snapshot taken mid-stream (some requests resident,
+    some queued, some finished), restored into a FRESH engine — which
+    finishes with streams bit-identical to the uninterrupted run and
+    zero leaked pages.  With sharing on, restored residents re-attach
+    through the trie like any recompute admission."""
+    cfg = _cfg(prefix_sharing=sharing)
+    ref_out = _reference(cfg, params, seed=5)
+
+    got = _reqs(cfg, seed=5)
+    e1 = _engine(cfg, params)
+    e1.submit(got)
+    for _ in range(3):                          # mid-wave: in-flight state
+        e1.step()
+    spath = str(tmp_path / "mid.json")
+    info = e1.snapshot(spath)
+    assert info["requests"] == len(got)
+    assert info["in_flight"] >= 1, "snapshot point was not mid-stream"
+
+    e2 = _engine(cfg, params)
+    r = e2.restore(spath)
+    assert r["restored"] == info["in_flight"]
+    e2.drain()
+    assert e2.results() == ref_out
+    _assert_zero_leaks(e2)
+    # The crashed original is dead by contract; never drained.
+
+
+def test_journal_replay_after_injected_kill(params, tmp_path):
+    """chaos_crash_after_wave kills the engine at a flushed chunk
+    boundary; a fresh engine recovers from the journal ALONE (no
+    snapshot was ever taken) and finishes bit-identically."""
+    cfg = _cfg()
+    ref_out = _reference(cfg, params, seed=7)
+
+    jpath = str(tmp_path / "j.jsonl")
+    crash = dataclasses.replace(cfg, chaos_crash_after_wave=1)
+    e1 = _engine(crash, params, journal_path=jpath)
+    e1.submit(_reqs(cfg, seed=7))
+    with pytest.raises(ChaosCrash) as ei:
+        e1.drain()
+    assert ei.value.wave >= 1
+
+    e2 = _engine(cfg, params, journal_path=jpath)
+    rep = e2.restore()                           # journal-only recovery
+    assert rep["replayed_events"] >= len(_PRESSURE)
+    e2.drain()
+    assert e2.results() == ref_out
+    _assert_zero_leaks(e2)
+
+
+def test_snapshot_plus_journal_suffix(params, tmp_path):
+    """Snapshot at wave 1, crash later: restore loads the snapshot and
+    replays only the journal suffix past its recorded offset —
+    terminal events re-retire finished requests with their exact
+    streams, never re-running them."""
+    cfg = _cfg()
+    ref_out = _reference(cfg, params, seed=9)
+
+    jpath = str(tmp_path / "j.jsonl")
+    spath = str(tmp_path / "s.json")
+    crash = dataclasses.replace(cfg, chaos_crash_after_wave=2)
+    e1 = _engine(crash, params, journal_path=jpath)
+    e1.submit(_reqs(cfg, seed=9))
+    e1.step()
+    e1.snapshot(spath)
+    with pytest.raises(ChaosCrash):
+        e1.drain()
+
+    e2 = _engine(cfg, params, journal_path=jpath)
+    rep = e2.restore(spath)
+    e2.drain()
+    assert e2.results() == ref_out
+    assert rep["restored"] >= 1
+    _assert_zero_leaks(e2)
+
+
+def test_terminal_results_survive_restore(params, tmp_path):
+    """Requests that finished BEFORE the snapshot come back as terminal
+    records — status and streams intact, never re-admitted."""
+    cfg = _cfg()
+    got = _reqs(cfg, spec=[(6, 4)], seed=3)
+    e1 = _engine(cfg, params)
+    e1.run(got)
+    spath = str(tmp_path / "done.json")
+    e1.snapshot(spath)
+
+    e2 = _engine(cfg, params)
+    rep = e2.restore(spath)
+    assert rep == {"restored": 0, "replayed_events": 0, "terminal": 1}
+    r = e2.request(got[0].id)
+    assert r.done and r.status == "finished"
+    assert r.generated == got[0].generated
+    assert not e2.step()                        # nothing left to run
+
+
+def test_corrupted_snapshot_rejected_with_typed_error(params, tmp_path):
+    """Every tampering mode maps to its SnapshotError.reason, and a
+    rejected restore leaves the live engine fully intact."""
+    cfg = _cfg()
+    e1 = _engine(cfg, params)
+    e1.run(_reqs(cfg, spec=[(6, 4)], seed=1))
+    spath = str(tmp_path / "s.json")
+    e1.snapshot(spath)
+
+    def tampered(mutate, name):
+        doc = json.load(open(spath))
+        mutate(doc)
+        p = str(tmp_path / name)
+        json.dump(doc, open(p, "w"))
+        return p
+
+    cases = [
+        ("checksum", tampered(
+            lambda d: d["payload"]["counters"].__setitem__(
+                "next_id", d["payload"]["counters"]["next_id"] + 1),
+            "flip.json")),
+        ("bad_magic", tampered(
+            lambda d: d.__setitem__("magic", "nope"), "magic.json")),
+        ("version", tampered(
+            lambda d: d.__setitem__("version", 999), "ver.json")),
+        ("unreadable", str(tmp_path / "absent.json")),
+    ]
+    trunc = str(tmp_path / "trunc.json")
+    open(trunc, "w").write(open(spath).read()[:40])
+    cases.append(("unreadable", trunc))
+
+    victim = _engine(cfg, params)
+    victim.submit(_reqs(cfg, spec=[(6, 4)], seed=2))
+    victim.step()
+    before = victim.results()
+    for reason, path in cases:
+        with pytest.raises(SnapshotError) as ei:
+            victim.restore(path)
+        assert ei.value.reason == reason, (reason, ei.value.reason)
+    assert victim.results() == before           # live state untouched
+    victim.drain()                              # still fully operational
+    assert all(r.done for r in victim._by_id.values())
+
+
+def test_restore_rejects_config_and_geometry_mismatch(params, tmp_path):
+    cfg = _cfg()
+    e1 = _engine(cfg, params)
+    e1.run(_reqs(cfg, spec=[(6, 4)], seed=1))
+    spath = str(tmp_path / "s.json")
+    e1.snapshot(spath)
+
+    other = _engine(dataclasses.replace(cfg, sampling="top_p", top_p=0.9),
+                    params)
+    with pytest.raises(SnapshotError) as ei:
+        other.restore(spath)
+    assert ei.value.reason == "config_mismatch"
+
+    # Chaos/strict knobs are excluded from the fingerprint: recovery
+    # legitimately runs with the crash injection OFF that the dead run
+    # had on.
+    relaxed = _engine(
+        dataclasses.replace(cfg, chaos_crash_after_wave=7,
+                            strict_invariants=True), params)
+    relaxed.restore(spath)                       # accepted
+
+    small = ServeEngine(cfg, params, batch_slots=2, max_len=32,
+                        chunk_size=2, n_pages=4)
+    with pytest.raises(SnapshotError) as ei:
+        small.restore(spath)
+    assert ei.value.reason == "geometry_mismatch"
+
+    with pytest.raises(SnapshotError) as ei:
+        _engine(cfg, params).restore()
+    assert ei.value.reason == "no_source"
+
+
+def test_inconsistent_snapshot_audit(params, tmp_path):
+    """A snapshot whose refcounts disagree with its page tables is
+    internally inconsistent — rejected by the pre-restore audit even
+    though its checksum is valid (it was WRITTEN corrupt, not torn)."""
+    cfg = _cfg()
+    e1 = _engine(cfg, params)
+    e1.submit(_reqs(cfg, seed=4))
+    e1.step()
+    spath = str(tmp_path / "s.json")
+    e1.snapshot(spath)
+    payload = load_snapshot(spath)
+    assert payload["allocator"]["refcounts"], "no held pages to corrupt"
+    k = next(iter(payload["allocator"]["refcounts"]))
+    payload["allocator"]["refcounts"][k] += 1
+    write_snapshot(spath, payload)               # re-checksummed
+
+    with pytest.raises(SnapshotError) as ei:
+        _engine(cfg, params).restore(spath)
+    assert ei.value.reason == "inconsistent"
+
+
+def test_quarantine_persists_across_restore(params, tmp_path):
+    """Pages quarantined by integrity healing never silently return to
+    service: restore re-quarantines them in the fresh allocator."""
+    cfg = _cfg()
+    e1 = _engine(cfg, params)
+    e1.run(_reqs(cfg, spec=[(6, 4)], seed=1))
+    for p in (2, 5):
+        assert e1.allocator.quarantine(p)
+    spath = str(tmp_path / "q.json")
+    e1.snapshot(spath)
+
+    e2 = _engine(cfg, params)
+    e2.restore(spath)
+    assert sorted(e2.allocator.quarantined_pages) == [2, 5]
+    assert e2.allocator.usable_pages() == e2.n_pages - 2
+    e2.check_invariants()
+
+
+def test_journal_skips_torn_trailing_line(tmp_path):
+    """A partial trailing line (the write a crash interrupted) is
+    skipped, not an error; everything before it replays intact."""
+    jpath = str(tmp_path / "j.jsonl")
+    j = RequestJournal(jpath)
+    j.append({"ev": "submit", "id": "a"})
+    j.append({"ev": "terminal", "id": "a", "status": "finished",
+              "generated": [1, 2]})
+    off = j.offset()
+    j.close()
+    with open(jpath, "a") as f:
+        f.write('{"ev": "submit", "id": "b", "pro')    # torn mid-record
+    evs = list(RequestJournal.replay(jpath))
+    assert [e["id"] for e in evs] == ["a", "a"]
+    assert list(RequestJournal.replay(jpath, offset=off)) == []
+    with pytest.raises(SnapshotError) as ei:
+        list(RequestJournal.replay(str(tmp_path / "absent.jsonl")))
+    assert ei.value.reason == "unreadable"
+
+
+def test_drain_watchdog_raises_no_progress(params):
+    """Satellite: a pool where every page is quarantined can never admit
+    the queued request — drain() must raise NoProgressError after the
+    configured number of zero-progress steps instead of spinning."""
+    cfg = _cfg()
+    eng = _engine(cfg, params, no_progress_limit=4)
+    eng.submit(_reqs(cfg, spec=[(6, 4)], seed=1))
+    for p in list(eng.allocator.free_pages):
+        eng.allocator.quarantine(p)
+    with pytest.raises(NoProgressError) as ei:
+        eng.drain()
+    msg = str(ei.value)
+    assert "no progress" in msg and "usable_pages" in msg
+    # The engine is still inspectable after the typed failure.
+    assert eng.allocator.usable_pages() == 0
