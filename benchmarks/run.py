@@ -29,6 +29,9 @@ figure-specific metrics.
 * ``serve_chaos`` — lifecycle robustness: forced preemptions under an
   undersized pool and a seeded fault-injected run, both asserted
   bit-identical to the fault-free run with zero leaked pages
+* ``lint`` — the ``repro.lint`` static-analysis pass over src/,
+  benchmarks/ and examples/ against the committed baseline:
+  ``rules_run``, ``findings``, ``baseline_suppressed``, ``wall_s``
 
 so BENCH_*.json files can track the planning-pipeline and serving perf
 trajectories across PRs.  ``--analytic-only`` skips the measured (jit
@@ -163,6 +166,27 @@ def main(argv=None) -> None:
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 
+    # -- static-analysis pass (perf/determinism invariants) ------------------
+    import os
+
+    from repro.lint import load_baseline, run_lint
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline_path = os.path.join(repo_root, "lint_baseline.json")
+    lint_result = run_lint(
+        [os.path.join(repo_root, d)
+         for d in ("src", "benchmarks", "examples")],
+        baseline=(load_baseline(baseline_path)
+                  if os.path.isfile(baseline_path) else None),
+        root=repo_root,
+    )
+    lint_summary = {
+        "rules_run": lint_result.rules_run,
+        "findings": [f.to_dict() for f in lint_result.findings],
+        "baseline_suppressed": lint_result.baseline_suppressed,
+        "wall_s": lint_result.wall_s,
+    }
+
     stats = backend.stats()
     summary = {
         "sweep_wall_s": sweep_wall_s,
@@ -172,13 +196,19 @@ def main(argv=None) -> None:
             seed_sweep_wall_s / sweep_wall_s if seed_sweep_wall_s else None
         ),
         "plan_cache_hit_rate": stats["hit_rate"],
+        "lint": lint_summary,
         **serve_summary,
         "plan_cache": {k: v for k, v in stats.items() if k != "sweep_table"},
         "sweep_table": stats["sweep_table"],
     }
     print(f"sweep_wall_s,{sweep_wall_s * 1e6:.1f},"
           + json.dumps({k: v for k, v in summary.items()
-                        if k not in ("plan_cache", "sweep_table")}))
+                        if k not in ("plan_cache", "sweep_table", "lint")}))
+    print(f"lint,{lint_summary['wall_s'] * 1e6:.1f},"
+          + json.dumps({"findings": len(lint_summary["findings"]),
+                        "baseline_suppressed":
+                            lint_summary["baseline_suppressed"],
+                        "rules": len(lint_summary["rules_run"])}))
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows, **summary}, f, indent=1, sort_keys=True)

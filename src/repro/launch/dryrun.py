@@ -350,13 +350,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             ladder.append(step_knobs)
 
     result = cost = colls = mem = None
-    t0 = t1 = t2 = time.time()
+    # perf_counter, not time.time (R004): these are interval timings and
+    # the wall clock is not monotonic under NTP steps.
+    t0 = t1 = t2 = time.perf_counter()
     for i, kn in enumerate(ladder):
-        t0 = time.time()
+        t0 = time.perf_counter()
         cfg, shape, mesh, lowered = lower_cell(arch, shape_name, multi_pod, **kn)
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        t2 = time.time()
+        t2 = time.perf_counter()
         result, cost, colls, mem = analyze(cfg, shape, mesh, lowered, t2 - t1,
                                            compiled)
         del lowered, compiled

@@ -1,0 +1,34 @@
+"""repro.lint — a JAX/Pallas-aware static-analysis pass for this repo.
+
+The serve tier's performance and determinism rest on invariants that are
+easy to break silently: at most one host sync per decode chunk, no
+Python-value-dependent shapes inside jitted dispatch, donated buffers
+never read after the donating call, refcount-balanced page alloc/release
+on every path, reproducible iteration order, and Pallas grids that
+actually cover their operands.  ``repro.lint`` encodes each invariant as
+a rule over the stdlib ``ast`` plus a lightweight device-taint dataflow
+(no third-party dependencies), so CI catches violations before a bench
+regresses or a chaos run flakes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.lint src benchmarks examples
+    PYTHONPATH=src python -m repro.lint --list-rules
+
+Suppression: append ``# repro-lint: disable=R001 -- reason`` to the
+offending line (or the line just above).  Grandfathered findings live in
+``lint_baseline.json`` at the repo root; see DESIGN.md §6 for policy.
+"""
+from repro.lint.core import (  # noqa: F401
+    Finding,
+    LintResult,
+    all_rules,
+    analyze_source,
+    run_lint,
+)
+from repro.lint.baseline import load_baseline, write_baseline  # noqa: F401
+
+# Importing the rule modules registers every rule with the registry.
+from repro.lint import rules_sync  # noqa: F401,E402
+from repro.lint import rules_determinism  # noqa: F401,E402
+from repro.lint import rules_pallas  # noqa: F401,E402

@@ -1,0 +1,67 @@
+"""Baseline file: grandfathered findings that don't fail the build.
+
+Entries are keyed by ``(rule, path, symbol)`` with a count — robust to
+line drift (a refactor that moves a function doesn't invalidate the
+baseline) but strict about growth (one *new* finding in a baselined
+function still fails).  Every entry carries a human ``reason``; the
+policy (DESIGN.md §6) is that baselining is for pre-existing findings
+awaiting a real fix, never for new code — new code uses an inline
+``# repro-lint: disable=...`` with a justification, or gets fixed.
+"""
+from __future__ import annotations
+
+import json
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path):
+    """Load a baseline file; returns {(rule, path, symbol): count}."""
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: unsupported baseline version {data.get('version')!r}"
+        )
+    out = {}
+    for entry in data.get("entries", []):
+        key = (entry["rule"], entry["path"], entry["symbol"])
+        out[key] = out.get(key, 0) + int(entry.get("count", 1))
+    return out
+
+
+def write_baseline(path, findings, reason="grandfathered"):
+    """Serialize current findings as a fresh baseline (sorted, stable)."""
+    counts = {}
+    for f in findings:
+        key = (f.rule, f.path, f.symbol)
+        counts[key] = counts.get(key, 0) + 1
+    entries = [
+        {"rule": rule, "path": fpath, "symbol": symbol, "count": n,
+         "reason": reason}
+        for (rule, fpath, symbol), n in sorted(counts.items())
+    ]
+    data = {"version": BASELINE_VERSION, "entries": entries}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return len(entries)
+
+
+def filter_findings(findings, baseline):
+    """Drop findings covered by the baseline.
+
+    Returns ``(kept, n_suppressed)``.  Within one ``(rule, path,
+    symbol)`` group the first ``count`` findings (in line order) are
+    suppressed; any beyond that are new and stay active.
+    """
+    budget = dict(baseline)
+    kept, suppressed = [], 0
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col)):
+        key = (f.rule, f.path, f.symbol)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            suppressed += 1
+        else:
+            kept.append(f)
+    return kept, suppressed

@@ -1,0 +1,128 @@
+"""Command-line entry point: ``python -m repro.lint [paths ...]``.
+
+Exit codes: 0 = clean (modulo suppressions/baseline), 1 = active
+findings, 2 = usage or internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.lint import baseline as baseline_mod
+from repro.lint.core import all_rules, run_lint
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+DEFAULT_BASELINE = "lint_baseline.json"
+
+
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="repro.lint",
+        description=("JAX/Pallas-aware static analysis for the serve "
+                     "tier's performance & determinism invariants."),
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit a JSON report to PATH ('-' = stdout)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE, metavar="PATH",
+                    help="baseline file of grandfathered findings "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file "
+                         "and exit 0")
+    ap.add_argument("--rules", default=None, metavar="R001,R004",
+                    help="comma-separated subset of rule ids to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--root", default=None, metavar="DIR",
+                    help="repo root for relative paths (default: cwd)")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.title}")
+            print(f"      {rule.invariant}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        known = {r.id for r in all_rules()}
+        unknown = [r for r in rules if r not in known]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    paths = args.paths or list(DEFAULT_PATHS)
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"no such path(s): {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    baseline = None
+    if not args.no_baseline and not args.write_baseline:
+        if os.path.isfile(args.baseline):
+            try:
+                baseline = baseline_mod.load_baseline(args.baseline)
+            except (ValueError, OSError, json.JSONDecodeError) as e:
+                print(f"bad baseline: {e}", file=sys.stderr)
+                return 2
+
+    result = run_lint(paths, rules=rules, baseline=baseline,
+                      root=args.root)
+
+    if args.write_baseline:
+        n = baseline_mod.write_baseline(args.baseline, result.findings)
+        print(f"wrote {n} baseline entr{'y' if n == 1 else 'ies'} "
+              f"({len(result.findings)} finding(s)) -> {args.baseline}")
+        return 0
+
+    json_payload = result.to_json()
+    if args.json == "-":
+        print(json.dumps(json_payload, indent=1, sort_keys=True))
+    else:
+        _print_human(result)
+        if args.json:
+            with open(args.json, "w", encoding="utf-8") as f:
+                json.dump(json_payload, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"# wrote {args.json}")
+
+    if result.errors:
+        return 2
+    return 1 if result.findings else 0
+
+
+def _print_human(result):
+    for f in result.findings:
+        print(f.render())
+    for path, message in result.errors:
+        print(f"{path}: ERROR {message}", file=sys.stderr)
+    counts = {}
+    for f in result.findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    by_rule = " ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+    print(
+        f"repro.lint: {len(result.findings)} finding(s)"
+        + (f" [{by_rule}]" if by_rule else "")
+        + f", {result.inline_suppressed} inline-suppressed"
+        + f", {result.baseline_suppressed} baselined"
+        + f" | {len(result.rules_run)} rules over "
+        + f"{result.files_checked} files in {result.wall_s:.2f}s"
+    )
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

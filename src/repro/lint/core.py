@@ -1,0 +1,327 @@
+"""Rule registry, suppression comments, and the per-file analysis driver.
+
+A rule is a small object with an ``id`` (``R001``..), a one-line
+``title``, an ``invariant`` docstring, and a ``check(module)`` method
+returning :class:`Finding` objects.  Rules register themselves via
+:func:`register`; the driver runs every registered rule over every file
+and filters the findings through line-level suppression comments.
+
+Suppression syntax (line-level only — no file-level blanket disables)::
+
+    x = np.asarray(dev)  # repro-lint: disable=R001 -- seed reference path
+    # repro-lint: disable=R004 -- wall-clock timestamp is the point here
+    t = time.time()
+
+A suppression applies to findings on its own line or, for a standalone
+comment line, on the next line.  The ``-- reason`` suffix is required by
+convention (DESIGN.md §6) but not enforced syntactically.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import time
+import tokenize
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a specific source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    symbol: str           # enclosing function/class qualname ("<module>" at top level)
+    message: str
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    def render(self):
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.symbol}] {self.message}")
+
+
+class Rule:
+    """Base class for lint rules.  Subclasses set id/title/invariant."""
+
+    id = "R000"
+    title = "unnamed rule"
+    invariant = ""
+
+    def check(self, module: "ModuleInfo"):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def finding(self, module, node, message):
+        return Finding(
+            rule=self.id,
+            path=module.path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            symbol=module.qualname(node),
+            message=message,
+        )
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator adding an instance of ``cls`` to the registry."""
+    rule = cls()
+    if rule.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.id}")
+    _REGISTRY[rule.id] = rule
+    return cls
+
+
+def all_rules():
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+# --------------------------------------------------------------------------
+# Suppression comments
+
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+?)(?:\s*--\s*(.*))?$"
+)
+
+
+def parse_suppressions(source: str):
+    """Map line number -> set of suppressed rule ids.
+
+    A comment suppresses its own line; a comment that is the only thing
+    on its line also suppresses the next line (so multi-line statements
+    can carry a suppression above them).
+    """
+    suppressed: dict[int, set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            line = tok.start[0]
+            suppressed.setdefault(line, set()).update(rules)
+            # Standalone comment: nothing but whitespace before it.
+            if tok.line[: tok.start[1]].strip() == "":
+                suppressed.setdefault(line + 1, set()).update(rules)
+    except tokenize.TokenError:
+        pass
+    return suppressed
+
+
+# --------------------------------------------------------------------------
+# Per-module context shared by all rules
+
+
+class ModuleInfo:
+    """Parsed source plus the lazily-built shared analyses rules need."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.suppressions = parse_suppressions(source)
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self._resolver = None
+        self._jit_index = None
+        self._analysis = None
+
+    # -- lazy shared analyses ------------------------------------------------
+
+    @property
+    def resolver(self):
+        if self._resolver is None:
+            from repro.lint.dataflow import Resolver
+
+            self._resolver = Resolver(self.tree)
+        return self._resolver
+
+    @property
+    def jit_index(self):
+        if self._jit_index is None:
+            from repro.lint.dataflow import JitIndex
+
+            self._jit_index = JitIndex(self.tree, self.resolver)
+        return self._jit_index
+
+    @property
+    def analysis(self):
+        if self._analysis is None:
+            from repro.lint.dataflow import ModuleAnalysis
+
+            self._analysis = ModuleAnalysis(self)
+        return self._analysis
+
+    # -- tree helpers --------------------------------------------------------
+
+    def parent(self, node):
+        return self._parents.get(node)
+
+    def ancestors(self, node):
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node):
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def qualname(self, node):
+        parts = []
+        for anc in [node, *self.ancestors(node)]:
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(anc.name)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def is_suppressed(self, finding: Finding):
+        for line in (finding.line, ):
+            rules = self.suppressions.get(line)
+            if rules and finding.rule in rules:
+                return True
+        return False
+
+
+# --------------------------------------------------------------------------
+# Driver
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list          # active (post-suppression, post-baseline)
+    baseline_suppressed: int
+    inline_suppressed: int
+    rules_run: list
+    files_checked: int
+    wall_s: float
+    errors: list            # (path, message) for unparseable files
+
+    def to_json(self):
+        return {
+            "rules_run": self.rules_run,
+            "findings": [f.to_dict() for f in self.findings],
+            "baseline_suppressed": self.baseline_suppressed,
+            "inline_suppressed": self.inline_suppressed,
+            "files_checked": self.files_checked,
+            "wall_s": round(self.wall_s, 4),
+            "errors": [{"path": p, "message": m} for p, m in self.errors],
+        }
+
+
+def analyze_source(source: str, path: str = "<string>", rules=None):
+    """Lint a source string; returns (findings, inline_suppressed_count).
+
+    Findings are sorted; suppression comments are applied.  ``rules``
+    restricts to a subset of rule ids.
+    """
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        raise ValueError(f"{path}: syntax error: {e}") from e
+    module = ModuleInfo(path, source, tree)
+    active = all_rules()
+    if rules is not None:
+        wanted = set(rules)
+        active = [r for r in active if r.id in wanted]
+    findings = []
+    for rule in active:
+        findings.extend(rule.check(module))
+    findings = list(dict.fromkeys(findings))  # dedup repeated events
+    kept, suppressed = [], 0
+    for f in sorted(findings, key=Finding.sort_key):
+        if module.is_suppressed(f):
+            suppressed += 1
+        else:
+            kept.append(f)
+    return kept, suppressed
+
+
+def iter_python_files(paths):
+    """Expand files/directories into sorted .py file paths."""
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(
+                    d for d in dirs
+                    if d not in ("__pycache__", ".git", ".pytest_cache")
+                )
+                out.extend(
+                    os.path.join(root, f) for f in sorted(files)
+                    if f.endswith(".py")
+                )
+    # De-dup while keeping deterministic order.
+    seen, uniq = set(), []
+    for p in out:
+        key = os.path.normpath(p)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(key)
+    return uniq
+
+
+def run_lint(paths, rules=None, baseline=None, root=None):
+    """Lint every .py file under ``paths``; returns a :class:`LintResult`.
+
+    ``baseline`` is a parsed baseline mapping (see repro.lint.baseline);
+    matched findings are counted, not reported.  Paths in findings are
+    made relative to ``root`` (default: cwd) so baselines are portable.
+    """
+    t0 = time.perf_counter()
+    root = root or os.getcwd()
+    files = iter_python_files(paths)
+    findings, inline_suppressed, errors = [], 0, []
+    for fpath in files:
+        try:
+            with open(fpath, encoding="utf-8") as f:
+                source = f.read()
+        except OSError as e:
+            errors.append((fpath, str(e)))
+            continue
+        rel = os.path.relpath(fpath, root).replace(os.sep, "/")
+        try:
+            kept, supp = analyze_source(source, path=rel, rules=rules)
+        except ValueError as e:
+            errors.append((rel, str(e)))
+            continue
+        findings.extend(kept)
+        inline_suppressed += supp
+    baseline_suppressed = 0
+    if baseline:
+        from repro.lint.baseline import filter_findings
+
+        findings, baseline_suppressed = filter_findings(findings, baseline)
+    active = all_rules()
+    if rules is not None:
+        wanted = set(rules)
+        active = [r for r in active if r.id in wanted]
+    return LintResult(
+        findings=sorted(findings, key=Finding.sort_key),
+        baseline_suppressed=baseline_suppressed,
+        inline_suppressed=inline_suppressed,
+        rules_run=[r.id for r in active],
+        files_checked=len(files),
+        wall_s=time.perf_counter() - t0,
+        errors=errors,
+    )

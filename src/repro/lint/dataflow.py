@@ -1,0 +1,846 @@
+"""Lightweight device-taint dataflow over the stdlib AST.
+
+This is deliberately *not* a full abstract interpreter.  It is a single
+forward pass per function (loop bodies walked twice so loop-carried
+taint stabilises) classifying every expression into one of four taint
+classes:
+
+* ``DEVICE``  — a jax array / tracer (rooted at ``jnp.*``, ``jax.lax.*``,
+  ``jax.random.*``, calls of known-jitted callables, traced parameters).
+  Coercing one of these to a Python or numpy value is a host sync.
+* ``HOST``    — host memory (numpy results, ``jax.device_get`` output).
+  Operating on these is free; they never sync again.
+* ``STATIC``  — Python values that are constant under tracing
+  (literals, ``.shape``/``.ndim``/``.dtype``, ``static_argnames``
+  parameters).  Branching on these inside jit is legitimate.
+* ``UNKNOWN`` — everything else (plain parameters, results of calls we
+  cannot see).  Rules never flag UNKNOWN values: false-positive control
+  beats recall for a CI-gating linter.
+
+The pass emits *events* (host syncs, device-dependent branches, traced
+shape construction, set iteration, ...) annotated with their loop and
+jit-region context; the rule modules turn events into findings.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+DEVICE = "device"
+HOST = "host"
+STATIC = "static"
+UNKNOWN = "unknown"
+
+# Call prefixes whose results live on device (or are tracers under jit).
+_DEVICE_PREFIXES = (
+    "jax.numpy.", "jax.lax.", "jax.nn.", "jax.random.", "jax.scipy.",
+    "jax.image.", "jax.ops.",
+)
+_DEVICE_CALLS = {"jax.device_put", "jax.vmap", "jax.grad", "jax.value_and_grad",
+                 "jax.pmap", "jax.checkpoint", "jax.remat"}
+# Structural jax helpers: result taint follows the arguments.
+_TREE_CALLS = ("jax.tree_util.", "jax.tree.")
+# Attributes that are trace-time constants on any array-like.
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "itemsize"}
+# Builtins whose result is a plain Python value derived structurally.
+_STATIC_BUILTINS = {"len", "range", "isinstance", "hasattr", "id", "repr",
+                    "str", "format", "type"}
+# Builtins that pass element taint through.
+_PASSTHROUGH_BUILTINS = {"sorted", "list", "tuple", "reversed", "sum", "min",
+                         "max", "abs", "zip", "enumerate", "map", "filter",
+                         "next", "iter"}
+# jnp constructors whose shape argument must be trace-static (R002).
+_SHAPE_CTORS = {
+    "jax.numpy.zeros": 0, "jax.numpy.ones": 0, "jax.numpy.full": 0,
+    "jax.numpy.empty": 0, "jax.numpy.eye": 0, "jax.numpy.arange": None,
+    "jax.numpy.broadcast_to": 1, "jax.numpy.reshape": 1,
+    "jax.numpy.tile": 1,
+}
+
+
+@dataclasses.dataclass
+class Value:
+    taint: str = UNKNOWN
+    is_set: bool = False          # tracked separately for R004
+
+    @staticmethod
+    def join(*values):
+        taints = [v.taint for v in values] or [STATIC]
+        if DEVICE in taints:
+            t = DEVICE
+        elif HOST in taints:
+            t = HOST
+        elif all(t == STATIC for t in taints):
+            t = STATIC
+        else:
+            t = UNKNOWN
+        return Value(t, any(v.is_set for v in values))
+
+
+V_DEVICE = Value(DEVICE)
+V_HOST = Value(HOST)
+V_STATIC = Value(STATIC)
+V_UNKNOWN = Value(UNKNOWN)
+
+
+# --------------------------------------------------------------------------
+# Name resolution through import aliases
+
+
+class Resolver:
+    """Resolve dotted expressions to canonical module paths.
+
+    ``import jax.numpy as jnp`` makes ``jnp.zeros`` resolve to
+    ``jax.numpy.zeros``; ``from jax.experimental import pallas as pl``
+    makes ``pl.pallas_call`` resolve to
+    ``jax.experimental.pallas.pallas_call``.
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.aliases: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}"
+                    )
+
+    def dotted(self, node):
+        """Return the canonical dotted name of an expression, or None."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.aliases.get(node.id, node.id)
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    def raw_dotted(self, node):
+        """Dotted name WITHOUT alias resolution ('self._prefill')."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+
+
+# --------------------------------------------------------------------------
+# Jit-region discovery
+
+
+@dataclasses.dataclass
+class TracedInfo:
+    """Why a function body is traced, and which params are static."""
+
+    kind: str                       # "jit" | "scan_body" | "pallas" | "nested"
+    static_names: frozenset = frozenset()
+    donate_argnums: tuple = ()
+
+
+@dataclasses.dataclass
+class JitBinding:
+    """``target = jax.jit(fn, ...)`` — call sites of ``target`` dispatch
+    a jitted computation (device result; donation applies)."""
+
+    target: str                     # raw dotted string, e.g. "self._prefill"
+    donate_argnums: tuple = ()
+    func_def: object = None
+
+
+_SCAN_HOFS = {"jax.lax.scan", "jax.lax.while_loop", "jax.lax.cond",
+              "jax.lax.fori_loop", "jax.lax.switch", "jax.lax.map"}
+
+
+def _static_names_from_call(call: ast.Call, func_def):
+    """Extract static_argnames/static_argnums from a jax.jit(...) call."""
+    names = set()
+    nums = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    names.add(elt.value)
+        elif kw.arg == "static_argnums":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                    nums.add(elt.value)
+    if nums and func_def is not None:
+        params = [a.arg for a in func_def.args.args]
+        if params and params[0] == "self":
+            params = params[1:]
+        for i in sorted(nums):
+            if 0 <= i < len(params):
+                names.add(params[i])
+    return frozenset(names)
+
+
+def _donate_from_call(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            return tuple(
+                elt.value for elt in ast.walk(kw.value)
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, int)
+            )
+    return ()
+
+
+class JitIndex:
+    """Which FunctionDefs are traced, and which names are jitted callables."""
+
+    def __init__(self, tree: ast.Module, resolver: Resolver):
+        self.resolver = resolver
+        self.traced: dict[ast.AST, TracedInfo] = {}
+        self.bindings: dict[str, JitBinding] = {}
+        # name -> FunctionDef for module-level and class-level defs
+        defs: dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, node)
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_decorators(node)
+            elif isinstance(node, ast.Call):
+                self._scan_call(node, defs)
+        # Functions defined inside a traced body are themselves traced
+        # (lax.scan steps, pl.when branches, ...).
+        self._propagate_nested(tree)
+
+    def _scan_decorators(self, node):
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = self.resolver.dotted(target)
+            if name in ("jax.jit", "jit"):
+                info = TracedInfo("jit")
+                if isinstance(dec, ast.Call):
+                    info = TracedInfo(
+                        "jit",
+                        _static_names_from_call(dec, node),
+                        _donate_from_call(dec),
+                    )
+                self.traced[node] = info
+                self.bindings[node.name] = JitBinding(
+                    node.name, info.donate_argnums, node
+                )
+            elif name in ("functools.partial", "partial") and isinstance(
+                dec, ast.Call
+            ):
+                if dec.args and self.resolver.dotted(dec.args[0]) in (
+                    "jax.jit", "jit"
+                ):
+                    info = TracedInfo(
+                        "jit",
+                        _static_names_from_call(dec, node),
+                        _donate_from_call(dec),
+                    )
+                    self.traced[node] = info
+                    self.bindings[node.name] = JitBinding(
+                        node.name, info.donate_argnums, node
+                    )
+
+    def _scan_call(self, call: ast.Call, defs):
+        name = self.resolver.dotted(call.func)
+        if name in ("jax.jit", "jit") and call.args:
+            fn_arg = call.args[0]
+            # Resolve the wrapped function to a def in this module, by
+            # trailing attribute name (handles both `f` and `self._f`).
+            fn_name = None
+            if isinstance(fn_arg, ast.Name):
+                fn_name = fn_arg.id
+            elif isinstance(fn_arg, ast.Attribute):
+                fn_name = fn_arg.attr
+            elif isinstance(fn_arg, ast.IfExp):
+                # jax.jit(self._a if flag else self._b, ...)
+                for branch in (fn_arg.body, fn_arg.orelse):
+                    bname = (branch.attr if isinstance(branch, ast.Attribute)
+                             else branch.id if isinstance(branch, ast.Name)
+                             else None)
+                    if bname in defs:
+                        fd = defs[bname]
+                        self.traced[fd] = TracedInfo(
+                            "jit", _static_names_from_call(call, fd),
+                            _donate_from_call(call))
+            func_def = defs.get(fn_name)
+            if func_def is not None:
+                self.traced[func_def] = TracedInfo(
+                    "jit",
+                    _static_names_from_call(call, func_def),
+                    _donate_from_call(call),
+                )
+        elif name in _SCAN_HOFS:
+            # Function-valued arguments become traced bodies.
+            for arg in call.args:
+                fd = None
+                if isinstance(arg, ast.Name):
+                    fd = defs.get(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    fd = arg
+                if fd is not None and fd not in self.traced:
+                    self.traced[fd] = TracedInfo("scan_body")
+        elif name and name.endswith("pallas_call") and call.args:
+            fn_arg = call.args[0]
+            static = set()
+            # pl.pallas_call(kernel, ...) or functools.partial(kernel, ...);
+            # partial keywords bind Python config, not Refs.
+            if isinstance(fn_arg, ast.Call):
+                static.update(kw.arg for kw in fn_arg.keywords if kw.arg)
+                inner = fn_arg.args[0] if fn_arg.args else None
+                fn_arg = inner if inner is not None else fn_arg
+            kname = (fn_arg.id if isinstance(fn_arg, ast.Name)
+                     else fn_arg.attr if isinstance(fn_arg, ast.Attribute)
+                     else None)
+            fd = defs.get(kname)
+            if fd is not None and fd not in self.traced:
+                # Keyword-only params are config by convention: Pallas
+                # passes Refs positionally.
+                static.update(a.arg for a in fd.args.kwonlyargs)
+                self.traced[fd] = TracedInfo("pallas", frozenset(static))
+
+    def _record_binding(self, target_raw, call):
+        pass
+
+    def _propagate_nested(self, tree):
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if node not in self.traced:
+                    continue
+                for inner in ast.walk(node):
+                    if inner is node:
+                        continue
+                    if isinstance(inner, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        if inner not in self.traced:
+                            self.traced[inner] = TracedInfo("nested")
+                            changed = True
+
+    def record_assignment(self, target_node, call, resolver, defs_hint=None):
+        pass
+
+
+def collect_jit_bindings(tree: ast.Module, resolver: Resolver,
+                         jit_index: JitIndex):
+    """Find ``target = jax.jit(fn, ...)`` assignments; index by the raw
+    dotted target string so call sites like ``self._prefill(...)`` match."""
+    bindings = dict(jit_index.bindings)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or not isinstance(
+            node.value, ast.Call
+        ):
+            continue
+        call = node.value
+        name = resolver.dotted(call.func)
+        if name not in ("jax.jit", "jit"):
+            continue
+        donate = _donate_from_call(call)
+        for tgt in node.targets:
+            raw = resolver.raw_dotted(tgt)
+            if raw:
+                bindings[raw] = JitBinding(raw, donate, None)
+    return bindings
+
+
+# --------------------------------------------------------------------------
+# Events
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str           # sync | branch_device | shape_traced | jit_in_loop
+    #                   | set_iter | alloc_drop | time_time | unseeded_rng
+    node: ast.AST
+    func: ast.AST | None        # enclosing FunctionDef (None at module level)
+    loop_depth: int             # 0 = not inside any for/while/comprehension
+    traced: TracedInfo | None   # jit-region context, if any
+    detail: str = ""            # e.g. sync sub-kind
+
+
+class ModuleAnalysis:
+    """Run the taint pass over every function; collect events."""
+
+    def __init__(self, module):
+        self.module = module
+        self.resolver = module.resolver
+        self.jit_index = module.jit_index
+        self.bindings = collect_jit_bindings(
+            module.tree, self.resolver, self.jit_index
+        )
+        self.events: list[Event] = []
+        self.self_taint = _class_attr_taint(module, self)
+        self._analyzed: set = set()
+        # Module level: treat the module body as a pseudo-function.
+        FunctionPass(self, None, module.tree.body, env={},
+                     traced=None).run()
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.analyze_function(node)
+
+    def analyze_function(self, node):
+        if node in self._analyzed:
+            return
+        self._analyzed.add(node)
+        traced = self.jit_index.traced.get(node)
+        env = {}
+        args = node.args
+        params = list(args.posonlyargs) + list(args.args) + list(
+            args.kwonlyargs
+        )
+        for i, a in enumerate(params):
+            if a.arg == "self" and i == 0:
+                env[a.arg] = V_UNKNOWN
+            elif traced is not None and traced.kind in ("jit", "scan_body",
+                                                        "pallas"):
+                if a.arg in traced.static_names:
+                    env[a.arg] = V_STATIC
+                else:
+                    env[a.arg] = V_DEVICE
+            else:
+                env[a.arg] = V_UNKNOWN
+        FunctionPass(self, node, node.body, env=env, traced=traced).run()
+
+    def emit(self, kind, node, func, loop_depth, traced, detail=""):
+        self.events.append(
+            Event(kind, node, func, loop_depth, traced, detail)
+        )
+
+
+def _class_attr_taint(module, analysis):
+    """Infer taint of ``self.X`` per class from every ``self.X = ...``.
+
+    Two fixed-point iterations: the second pass sees first-pass attr
+    taints, which resolves chains like ``self.cache`` assigned from the
+    result of a jitted call that itself reads ``self.cache``.
+    """
+    result: dict[str, Value] = {}
+    for _ in range(2):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for stmt in ast.walk(node):
+                targets = []
+                if isinstance(stmt, ast.Assign):
+                    targets, value = stmt.targets, stmt.value
+                elif isinstance(stmt, ast.AugAssign):
+                    targets, value = [stmt.target], stmt.value
+                else:
+                    continue
+                ev = Evaluator(analysis, env={}, traced=None,
+                               self_taint=result, silent=True)
+                val = ev.eval(value)
+                flat = []
+                for t in targets:
+                    flat.extend(t.elts if isinstance(
+                        t, (ast.Tuple, ast.List)) else [t])
+                for t in flat:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        prev = result.get(t.attr)
+                        result[t.attr] = (Value.join(prev, val)
+                                          if prev else val)
+    return result
+
+
+# --------------------------------------------------------------------------
+# Expression evaluation
+
+
+class Evaluator:
+    """Evaluate an expression to a Value, emitting events as side effects."""
+
+    def __init__(self, analysis, env, traced, self_taint, silent=False,
+                 func=None, loop_depth=0):
+        self.analysis = analysis
+        self.env = env
+        self.traced = traced
+        self.self_taint = self_taint
+        self.silent = silent
+        self.func = func
+        self.loop_depth = loop_depth
+
+    def emit(self, kind, node, detail=""):
+        if not self.silent:
+            self.analysis.emit(kind, node, self.func, self.loop_depth,
+                               self.traced, detail)
+
+    # -- dispatch -----------------------------------------------------------
+
+    def eval(self, node):
+        if node is None:
+            return V_STATIC
+        method = getattr(self, f"_eval_{type(node).__name__}", None)
+        if method is not None:
+            return method(node)
+        # Default: join taints of child expressions.
+        vals = [self.eval(c) for c in ast.iter_child_nodes(node)
+                if isinstance(c, ast.expr)]
+        return Value.join(*vals) if vals else V_UNKNOWN
+
+    def _eval_Constant(self, node):
+        return V_STATIC
+
+    def _eval_Name(self, node):
+        return self.env.get(node.id, V_UNKNOWN)
+
+    def _eval_Attribute(self, node):
+        if node.attr in _STATIC_ATTRS:
+            return V_STATIC
+        if isinstance(node.value, ast.Name) and node.value.id == "self":
+            return self.self_taint.get(node.attr, V_UNKNOWN)
+        base = self.eval(node.value)
+        if base.taint == DEVICE:
+            return V_DEVICE        # keeps `.at[...]`-style chains on device
+        return V_UNKNOWN
+
+    def _eval_Subscript(self, node):
+        base = self.eval(node.value)
+        self.eval(node.slice)
+        if base.taint in (DEVICE, HOST):
+            return Value(base.taint)
+        if base.taint == STATIC:
+            return V_STATIC        # shape[0] etc.
+        return V_UNKNOWN
+
+    def _eval_BinOp(self, node):
+        return Value.join(self.eval(node.left), self.eval(node.right))
+
+    def _eval_UnaryOp(self, node):
+        return self.eval(node.operand)
+
+    def _eval_BoolOp(self, node):
+        return Value.join(*[self.eval(v) for v in node.values])
+
+    def _eval_Compare(self, node):
+        vals = [self.eval(node.left)] + [self.eval(c) for c in
+                                         node.comparators]
+        # `x is None`, `x in container` produce Python bools even on
+        # containers of device arrays — not device-valued.
+        if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+               for op in node.ops):
+            return V_STATIC
+        return Value.join(*vals)
+
+    def _eval_IfExp(self, node):
+        self.eval(node.test)
+        return Value.join(self.eval(node.body), self.eval(node.orelse))
+
+    def _eval_Tuple(self, node):
+        return Value.join(*[self.eval(e) for e in node.elts]) \
+            if node.elts else V_STATIC
+
+    _eval_List = _eval_Tuple
+
+    def _eval_Set(self, node):
+        v = self._eval_Tuple(node)
+        return Value(v.taint, is_set=True)
+
+    def _eval_Dict(self, node):
+        vals = [self.eval(v) for v in node.values if v is not None]
+        return Value.join(*vals) if vals else V_STATIC
+
+    def _eval_JoinedStr(self, node):
+        for v in node.values:
+            if isinstance(v, ast.FormattedValue):
+                self.eval(v.value)
+        return V_STATIC
+
+    def _eval_Lambda(self, node):
+        return V_UNKNOWN
+
+    def _eval_ListComp(self, node):
+        return self._eval_comp(node, node.elt)
+
+    def _eval_GeneratorExp(self, node):
+        return self._eval_comp(node, node.elt)
+
+    def _eval_SetComp(self, node):
+        v = self._eval_comp(node, node.elt)
+        return Value(v.taint, is_set=True)
+
+    def _eval_DictComp(self, node):
+        return self._eval_comp(node, node.value)
+
+    def _eval_comp(self, node, elt):
+        inner = Evaluator(self.analysis, dict(self.env), self.traced,
+                          self.self_taint, self.silent, self.func,
+                          self.loop_depth + 1)
+        for gen in node.generators:
+            src = inner.eval(gen.iter)
+            if src.is_set:
+                inner.emit("set_iter", gen.iter)
+            tgt_val = Value(src.taint) if src.taint in (DEVICE, HOST) \
+                else V_UNKNOWN
+            _bind_target(inner.env, gen.target, tgt_val)
+            for cond in gen.ifs:
+                inner.eval(cond)
+        return inner.eval(elt)
+
+    def _eval_Starred(self, node):
+        return self.eval(node.value)
+
+    def _eval_Await(self, node):
+        return self.eval(node.value)
+
+    # -- calls --------------------------------------------------------------
+
+    def _eval_Call(self, node):
+        name = self.analysis.resolver.dotted(node.func)
+        raw = self.analysis.resolver.raw_dotted(node.func)
+        arg_vals = [self.eval(a) for a in node.args]
+        for kw in node.keywords:
+            arg_vals.append(self.eval(kw.value))
+        any_device = any(v.taint == DEVICE for v in arg_vals)
+
+        # ---- host-sync sources (R001) --------------------------------
+        if name == "jax.device_get":
+            self.emit("sync", node, "jax.device_get")
+            return V_HOST
+        if name in ("jax.block_until_ready",):
+            self.emit("sync", node, name)
+            return arg_vals[0] if arg_vals else V_UNKNOWN
+        if name in ("numpy.asarray", "numpy.array",
+                    "numpy.ascontiguousarray"):
+            if any_device:
+                self.emit("sync", node, name)
+            return V_HOST
+        if name and name.startswith("numpy."):
+            if any_device:
+                self.emit("sync", node, name)
+            if name == "numpy.random.default_rng":
+                if not node.args and not node.keywords:
+                    self.emit("unseeded_rng", node, name)
+                return V_HOST
+            if name.startswith("numpy.random.") and name not in (
+                "numpy.random.default_rng", "numpy.random.Generator",
+                "numpy.random.SeedSequence",
+            ):
+                # Module-level numpy RNG: global mutable seed state.
+                self.emit("unseeded_rng", node, name)
+            return V_HOST
+        if name in ("int", "float", "bool", "complex") and any_device:
+            self.emit("sync", node, f"{name}()")
+            return V_STATIC
+        recv = (self.eval(node.func.value)
+                if isinstance(node.func, ast.Attribute) else None)
+        if (recv is not None
+                and node.func.attr in ("item", "tolist", "tobytes")
+                and recv.taint == DEVICE):
+            self.emit("sync", node, f".{node.func.attr}()")
+            return V_HOST
+
+        # ---- nondeterminism sources (R004) ---------------------------
+        if name == "time.time":
+            self.emit("time_time", node, name)
+            return V_STATIC
+        if name and (name.startswith("random.") or name == "uuid.uuid4"):
+            self.emit("unseeded_rng", node, name)
+            return V_UNKNOWN
+        if name in ("set", "frozenset"):
+            return Value(Value.join(*arg_vals).taint if arg_vals
+                         else STATIC, is_set=True)
+
+        # ---- recompile hazards (R002) --------------------------------
+        if name in ("jax.jit", "jit") and self.loop_depth > 0:
+            self.emit("jit_in_loop", node, name or "jax.jit")
+        if self.traced is not None and name in _SHAPE_CTORS:
+            pos = _SHAPE_CTORS[name]
+            pos_vals = arg_vals[: len(node.args)]
+            hazard = (
+                any(v.taint == DEVICE for v in pos_vals) if pos is None
+                else (len(pos_vals) > pos and pos_vals[pos].taint == DEVICE)
+            )
+            if hazard:
+                self.emit("shape_traced", node, name)
+
+        # ---- result taint --------------------------------------------
+        if name:
+            if name in _DEVICE_CALLS or any(
+                name.startswith(p) for p in _DEVICE_PREFIXES
+            ):
+                return V_DEVICE
+            if any(name.startswith(p) for p in _TREE_CALLS):
+                return Value.join(*arg_vals) if arg_vals else V_UNKNOWN
+            if name in _STATIC_BUILTINS:
+                return V_STATIC
+            if name in _PASSTHROUGH_BUILTINS:
+                j = Value.join(*arg_vals) if arg_vals else V_STATIC
+                return Value(j.taint)  # sorted(set) is a list again
+            if name in ("dict",):
+                return Value(Value.join(*arg_vals).taint if arg_vals
+                             else STATIC)
+        if raw and raw in self.analysis.bindings:
+            return V_DEVICE         # call of a jitted binding
+        # Constructor calls (capitalized by convention) wrap their
+        # arguments in host objects; don't inherit device taint from a
+        # `params` argument (ServeEngine(cfg, params) is not an array).
+        last = (name or raw or "").rsplit(".", 1)[-1]
+        if last[:1].isupper():
+            return V_UNKNOWN
+        # Method calls on device values stay on device (.astype, .sum, ...)
+        if recv is not None:
+            if recv.taint == DEVICE:
+                return V_DEVICE
+            if recv.taint == HOST:
+                return V_HOST
+        if any_device:
+            return V_DEVICE         # local helpers over device args
+        return V_UNKNOWN
+
+
+def _bind_target(env, target, value):
+    if isinstance(target, ast.Name):
+        env[target.id] = value
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            _bind_target(env, elt, Value(value.taint))
+    elif isinstance(target, ast.Starred):
+        _bind_target(env, target.value, value)
+    # Attribute/Subscript stores don't rebind local taint.
+
+
+# --------------------------------------------------------------------------
+# Statement walk
+
+
+class FunctionPass:
+    """Forward statement walk over one function body."""
+
+    def __init__(self, analysis, func, body, env, traced):
+        self.analysis = analysis
+        self.func = func
+        self.body = body
+        self.env = env
+        self.traced = traced
+        self.self_taint = analysis.self_taint
+
+    def run(self):
+        self.visit_block(self.body, loop_depth=0)
+
+    def _evaluator(self, loop_depth):
+        return Evaluator(self.analysis, self.env, self.traced,
+                         self.self_taint, func=self.func,
+                         loop_depth=loop_depth)
+
+    def visit_block(self, stmts, loop_depth):
+        for stmt in stmts:
+            self.visit_stmt(stmt, loop_depth)
+
+    def visit_stmt(self, stmt, loop_depth):
+        ev = self._evaluator(loop_depth)
+        if isinstance(stmt, ast.Assign):
+            val = ev.eval(stmt.value)
+            for tgt in stmt.targets:
+                self._store(tgt, val, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._store(stmt.target, ev.eval(stmt.value), stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            val = Value.join(ev.eval(stmt.target), ev.eval(stmt.value))
+            self._store(stmt.target, val, stmt.value)
+        elif isinstance(stmt, ast.Expr):
+            ev.eval(stmt.value)
+        elif isinstance(stmt, (ast.Return, ast.Raise)):
+            if getattr(stmt, "value", None) is not None:
+                ev.eval(stmt.value)
+            if isinstance(stmt, ast.Raise) and stmt.exc is not None:
+                ev.eval(stmt.exc)
+        elif isinstance(stmt, ast.If):
+            self._branch_test(stmt.test, loop_depth)
+            before = dict(self.env)
+            self.visit_block(stmt.body, loop_depth)
+            after_body = dict(self.env)
+            self.env.clear()
+            self.env.update(before)
+            self.visit_block(stmt.orelse, loop_depth)
+            for k in sorted(set(after_body) | set(self.env)):
+                a, b = after_body.get(k), self.env.get(k)
+                self.env[k] = Value.join(a, b) if a and b else (a or b)
+        elif isinstance(stmt, ast.While):
+            self._branch_test(stmt.test, loop_depth)
+            for _ in range(2):
+                self.visit_block(stmt.body, loop_depth + 1)
+            self.visit_block(stmt.orelse, loop_depth)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            src = ev.eval(stmt.iter)
+            if src.is_set:
+                ev.emit("set_iter", stmt.iter)
+            tgt_val = (Value(src.taint) if src.taint in (DEVICE, HOST)
+                       else V_UNKNOWN)
+            _bind_target(self.env, stmt.target, tgt_val)
+            for _ in range(2):
+                self.visit_block(stmt.body, loop_depth + 1)
+            self.visit_block(stmt.orelse, loop_depth)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                val = ev.eval(item.context_expr)
+                if item.optional_vars is not None:
+                    _bind_target(self.env, item.optional_vars, val)
+            self.visit_block(stmt.body, loop_depth)
+        elif isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body, loop_depth)
+            for handler in stmt.handlers:
+                self.visit_block(handler.body, loop_depth)
+            self.visit_block(stmt.orelse, loop_depth)
+            self.visit_block(stmt.finalbody, loop_depth)
+        elif isinstance(stmt, ast.Assert):
+            self._branch_test(stmt.test, loop_depth, kind="assert")
+            if stmt.msg is not None:
+                ev.eval(stmt.msg)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    self.env.pop(t.id, None)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Nested def: analyzed separately with closure taint seeded
+            # from the current environment.
+            traced = self.analysis.jit_index.traced.get(stmt)
+            env = dict(self.env)
+            params = (list(stmt.args.posonlyargs) + list(stmt.args.args)
+                      + list(stmt.args.kwonlyargs))
+            for a in params:
+                if traced is not None:
+                    env[a.arg] = (V_STATIC if a.arg in traced.static_names
+                                  else V_DEVICE)
+                else:
+                    env[a.arg] = V_UNKNOWN
+            self.analysis._analyzed.add(stmt)
+            FunctionPass(self.analysis, stmt, stmt.body, env, traced).run()
+        # ClassDef bodies at function level, Global, Import, Pass: skip.
+
+    def _store(self, target, value, rhs):
+        # Elementwise unpack when the RHS is a literal tuple/list.
+        if (isinstance(target, (ast.Tuple, ast.List))
+                and isinstance(rhs, (ast.Tuple, ast.List))
+                and len(target.elts) == len(rhs.elts)):
+            ev = self._evaluator(0)
+            for t, r in zip(target.elts, rhs.elts):
+                self._store(t, ev.eval(r), r)
+            return
+        _bind_target(self.env, target, value)
+        # `self.X = ...` refines the module-wide attr taint locally.
+        if (isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"):
+            prev = self.self_taint.get(target.attr)
+            if prev is None or prev.taint == UNKNOWN:
+                self.self_taint[target.attr] = value
+
+    def _branch_test(self, test, loop_depth, kind="branch"):
+        ev = self._evaluator(loop_depth)
+        val = ev.eval(test)
+        if val.taint == DEVICE:
+            ev.emit("branch_device", test, kind)

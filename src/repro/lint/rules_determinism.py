@@ -1,0 +1,361 @@
+"""Rules R004–R005: reproducibility and refcount balance.
+
+R004 guards the bit-identity contracts every CI gate relies on
+(paged==contiguous, spec==plain, fault==fault-free): dispatch order
+must not flow through unordered sets, and serve/core paths must not
+read wall clocks or unseeded RNGs.  R005 guards the page-pool ledger
+(PR 3/5/6): every alloc/share must reach a release/free/quarantine or
+escape into owned state on every non-raising path — a leaked page is
+capacity gone until restart.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint.core import Rule, register
+
+# R004's clock/RNG prongs apply only to deterministic-by-contract tiers;
+# benchmarks and examples may legitimately read wall clocks.
+_DETERMINISTIC_PATHS = ("/serve/", "/core/", "/train/", "/launch/")
+
+
+def _in_deterministic_tier(path):
+    p = "/" + path.replace("\\", "/").lstrip("/")
+    return any(seg in p for seg in _DETERMINISTIC_PATHS)
+
+
+# Consuming a set through one of these makes iteration order moot.
+_ORDER_INSENSITIVE = {"sorted", "min", "max", "sum", "len", "set",
+                      "frozenset", "any", "all", "Counter"}
+
+
+def _feeds_order_insensitive(module, iter_node):
+    """True when the set iteration's result flows straight into an
+    order-insensitive consumer (``sorted(x for x in some_set)``)."""
+    cur = iter_node
+    for _ in range(4):
+        cur = module.parent(cur)
+        if cur is None:
+            return False
+        if isinstance(cur, ast.Call):
+            f = cur.func
+            name = (f.id if isinstance(f, ast.Name)
+                    else f.attr if isinstance(f, ast.Attribute) else None)
+            return name in _ORDER_INSENSITIVE
+        if isinstance(cur, ast.stmt):
+            return False
+    return False
+
+
+@register
+class Nondeterminism(Rule):
+    id = "R004"
+    title = "nondeterminism"
+    invariant = (
+        "Serve/core behavior must be a pure function of (requests, "
+        "seeds): no iteration over sets feeding dispatch order (hash "
+        "randomization reorders them across runs), no time.time() "
+        "(non-monotonic under NTP steps; use time.perf_counter for "
+        "intervals), no unseeded or global-state RNGs outside the "
+        "explicitly-seeded chaos knobs."
+    )
+
+    def check(self, module):
+        findings = []
+        deterministic = _in_deterministic_tier(module.path)
+        for ev in module.analysis.events:
+            if ev.kind == "set_iter":
+                if _feeds_order_insensitive(module, ev.node):
+                    continue
+                findings.append(self.finding(
+                    module, ev.node,
+                    "iterating a set: order varies under hash "
+                    "randomization and can reorder dispatch; wrap in "
+                    "sorted(...) or use an ordered structure",
+                ))
+            elif ev.kind == "time_time" and deterministic:
+                findings.append(self.finding(
+                    module, ev.node,
+                    "time.time() is non-monotonic (NTP steps make "
+                    "intervals negative or huge); use "
+                    "time.perf_counter() for intervals or pass "
+                    "timestamps in explicitly",
+                ))
+            elif ev.kind == "unseeded_rng" and deterministic:
+                findings.append(self.finding(
+                    module, ev.node,
+                    f"{ev.detail}: unseeded or global-state RNG in a "
+                    "deterministic tier; thread an explicitly-seeded "
+                    "np.random.default_rng(seed) through instead",
+                ))
+        return findings
+
+
+# --------------------------------------------------------------------------
+# R005: path-sensitive alloc/release balance
+
+
+_ACQUIRE_METHODS = {"alloc"}
+_CHECK_METHODS = {"share"}
+_RELEASE_METHODS = {"release", "free", "quarantine"}
+
+_MAX_PATHS = 256
+
+# Per-path variable states.
+_PENDING = "pending"      # holds pages, not yet consumed
+_NONE = "none"            # proven None (alloc refused)
+_CONSUMED = "consumed"    # released/escaped/returned
+
+
+@register
+class RefcountBalance(Rule):
+    id = "R005"
+    title = "refcount-balance"
+    invariant = (
+        "Every .alloc(...) result must, on every non-raising path, be "
+        "released/freed/quarantined, stored into owned state, returned, "
+        "or passed on — and every .share(...) verdict must be checked. "
+        "A dropped page list leaks pool capacity until restart "
+        "(check_invariants() only catches it after the damage)."
+    )
+
+    def check(self, module):
+        findings = []
+        for func in ast.walk(module.tree):
+            if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if _defines_allocator_api(func):
+                continue  # the allocator's own methods
+            findings.extend(self._check_function(module, func))
+        return findings
+
+    def _check_function(self, module, func):
+        findings = []
+        allocs = {}       # var name -> alloc Call node
+        own_stmts = _own_statements(func)
+        for stmt in own_stmts:
+            # Bare-expression alloc/share: result dropped unchecked.
+            if isinstance(stmt, ast.Expr) and isinstance(
+                stmt.value, ast.Call
+            ):
+                m = _method_name(stmt.value)
+                if m in _ACQUIRE_METHODS:
+                    findings.append(self.finding(
+                        module, stmt.value,
+                        ".alloc(...) result dropped: the returned pages "
+                        "are held by the allocator but unowned — "
+                        "permanent pool leak",
+                    ))
+                elif m in _CHECK_METHODS:
+                    findings.append(self.finding(
+                        module, stmt.value,
+                        ".share(...) verdict dropped: a refused share "
+                        "(chaos injection, quarantined page) goes "
+                        "unnoticed and the refcount ledger diverges",
+                    ))
+            if isinstance(stmt, ast.Assign) and isinstance(
+                stmt.value, ast.Call
+            ):
+                m = _method_name(stmt.value)
+                if m in _ACQUIRE_METHODS:
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Name):
+                            allocs[tgt.id] = stmt.value
+        if not allocs:
+            return findings
+        # Enumerate acyclic paths; find a path where some alloc'd var
+        # stays pending (non-None, never consumed) at exit.
+        leaks = _find_leaks(func, allocs)
+        for var, call in sorted(leaks.items()):
+            findings.append(self.finding(
+                module, call,
+                f"pages alloc'd into `{var}` are not released, freed, "
+                "quarantined, stored, or returned on every non-raising "
+                "path: leaked pool capacity on the unbalanced path",
+            ))
+        return findings
+
+
+def _defines_allocator_api(func):
+    return func.name in (_ACQUIRE_METHODS | _CHECK_METHODS
+                         | _RELEASE_METHODS)
+
+
+def _method_name(call):
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def _own_statements(func):
+    """Statements of ``func`` excluding nested function/class bodies."""
+    out = []
+
+    def visit(stmts):
+        for s in stmts:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            out.append(s)
+            for block in _child_blocks(s):
+                visit(block)
+
+    visit(func.body)
+    return out
+
+
+def _child_blocks(stmt):
+    blocks = []
+    for field in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, field, None)
+        if isinstance(b, list):
+            blocks.append(b)
+    for handler in getattr(stmt, "handlers", []) or []:
+        blocks.append(handler.body)
+    return blocks
+
+
+def _find_leaks(func, allocs):
+    """Return {var: alloc_call} for vars pending at the end of any path."""
+    leaks = {}
+    init = {v: None for v in allocs}
+    cont, exited, broke = _exec_block(func.body, [init], allocs)
+    for final in cont + exited + broke:
+        for var, state in final.items():
+            if state == _PENDING and var not in leaks:
+                leaks[var] = allocs[var]
+    return leaks
+
+
+def _exec_block(stmts, states, allocs):
+    """Abstractly execute ``stmts`` over each incoming path state.
+
+    Returns ``(fallthrough, exited, broke)``: states that fall off the
+    end, states that left via ``return``, and states that left via
+    ``break``/``continue`` (resolved by the nearest enclosing loop).
+    Raising paths are dropped — R005's contract covers non-raising
+    paths only.
+    """
+    exited, broke = [], []
+    for stmt in stmts:
+        nxt = []
+        for st in states[:_MAX_PATHS]:
+            c, e, b = _exec_stmt(stmt, st, allocs)
+            nxt.extend(c)
+            exited.extend(e)
+            broke.extend(b)
+        states = nxt
+        if not states:
+            break
+    return states, exited, broke
+
+
+def _exec_stmt(stmt, state, allocs):
+    """Execute one statement on one path state."""
+    if isinstance(stmt, ast.Raise):
+        return [], [], []
+    if isinstance(stmt, ast.Return):
+        if stmt.value is not None:
+            _consume_uses(stmt.value, state)
+        return [], [dict(state)], []
+    if isinstance(stmt, (ast.Break, ast.Continue)):
+        return [], [], [dict(state)]
+
+    if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call) \
+            and _method_name(stmt.value) in _ACQUIRE_METHODS:
+        _consume_uses(stmt.value, state)
+        st = dict(state)
+        for tgt in stmt.targets:
+            if isinstance(tgt, ast.Name) and tgt.id in allocs:
+                st[tgt.id] = _PENDING
+        return [st], [], []
+
+    if isinstance(stmt, ast.If):
+        refined = _refine_none(stmt.test, state)
+        if refined is not None:
+            true_state, false_state = refined
+        else:
+            _consume_uses(stmt.test, state)
+            true_state, false_state = dict(state), dict(state)
+        c1, e1, b1 = _exec_block(stmt.body, [true_state], allocs)
+        c2, e2, b2 = _exec_block(stmt.orelse, [false_state], allocs)
+        return c1 + c2, e1 + e2, b1 + b2
+
+    if isinstance(stmt, (ast.For, ast.While, ast.AsyncFor)):
+        if isinstance(stmt, ast.While):
+            _consume_uses(stmt.test, state)
+        else:
+            _consume_uses(stmt.iter, state)
+        # One-or-zero iterations is enough to observe per-iteration
+        # release patterns; break/continue land after the loop.
+        bc, be, bb = _exec_block(stmt.body, [dict(state)], allocs)
+        after = [dict(state)] + bc + bb
+        if stmt.orelse:
+            oc, oe, ob = _exec_block(stmt.orelse, after, allocs)
+            return oc, be + oe, ob
+        return after, be, []
+
+    if isinstance(stmt, ast.Try):
+        bc, be, bb = _exec_block(stmt.body, [dict(state)], allocs)
+        through = list(bc)
+        for handler in stmt.handlers:
+            hc, he, hb = _exec_block(handler.body, [dict(state)], allocs)
+            through.extend(hc)
+            be.extend(he)
+            bb.extend(hb)
+        if stmt.orelse:
+            oc, oe, ob = _exec_block(stmt.orelse, through, allocs)
+            through, be, bb = oc, be + oe, bb + ob
+        if stmt.finalbody:
+            fc, fe, fb = _exec_block(stmt.finalbody, through, allocs)
+            return fc, be + fe, bb + fb
+        return through, be, bb
+
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            _consume_uses(item.context_expr, state)
+        return _exec_block(stmt.body, [dict(state)], allocs)
+
+    # Any other statement: every mention of a tracked var consumes it.
+    _consume_uses(stmt, state)
+    return [dict(state)], [], []
+
+
+def _refine_none(test, state):
+    """``if X is None: ...`` / ``if X is not None: ...`` / ``if X:`` on
+    a tracked var refines its None-ness instead of consuming it.
+    Returns (true_state, false_state) or None."""
+    var, positive = None, None
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 and isinstance(
+        test.comparators[0], ast.Constant
+    ) and test.comparators[0].value is None and isinstance(
+        test.left, ast.Name
+    ):
+        var = test.left.id
+        positive = isinstance(test.ops[0], ast.IsNot)  # True: non-None br.
+    elif isinstance(test, ast.Name):
+        var, positive = test.id, True
+    elif (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+          and isinstance(test.operand, ast.Name)):
+        var, positive = test.operand.id, False
+    if var is None or var not in state or state[var] is None:
+        return None
+    true_state, false_state = dict(state), dict(state)
+    if state[var] == _PENDING:
+        if positive:
+            false_state[var] = _NONE
+        else:
+            true_state[var] = _NONE
+    return (true_state, false_state)
+
+
+def _consume_uses(node, state):
+    """Any Load of a tracked pending var consumes it (released, passed
+    on, stored, compared, logged — we only require *some* use on the
+    path; the specific release discipline is the allocator's contract)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and isinstance(
+            getattr(sub, "ctx", None), ast.Load
+        ):
+            if state.get(sub.id) == _PENDING:
+                state[sub.id] = _CONSUMED

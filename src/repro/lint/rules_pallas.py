@@ -1,0 +1,276 @@
+"""Rule R006: Pallas grid/BlockSpec consistency.
+
+Every ``pl.pallas_call`` in ``kernels/*`` encodes the same contract:
+the grid is ceil-div arithmetic over padded operand dims, each
+BlockSpec's index map takes exactly one positional argument per grid
+axis, and the index map returns one coordinate per block-shape axis.
+Getting any of these wrong compiles fine and silently reads the wrong
+tiles (or misses the operand tail entirely) — the worst kind of kernel
+bug, because interpret-mode smoke tests on exact-multiple shapes pass.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint.core import Rule, register
+
+
+@register
+class PallasGridShape(Rule):
+    id = "R006"
+    title = "pallas-grid-shape"
+    invariant = (
+        "For each pl.pallas_call: grid arithmetic uses ceil-div (cdiv/"
+        "round_up or a proven-exact floor-div), every BlockSpec index "
+        "map takes one positional arg per grid axis, and the index map "
+        "returns one coordinate per block-shape axis — otherwise tiles "
+        "beyond the operand tail are silently skipped or misaddressed."
+    )
+
+    def check(self, module):
+        findings = []
+        for call in ast.walk(module.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            name = module.resolver.dotted(call.func)
+            if not name or not name.endswith(".pallas_call"):
+                continue
+            findings.extend(self._check_call(module, call))
+        return findings
+
+    # ------------------------------------------------------------------
+
+    def _check_call(self, module, call):
+        findings = []
+        func = module.enclosing_function(call)
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+
+        grid_node = kwargs.get("grid")
+        grid_len, grid_elts = self._resolve_grid(module, func, grid_node)
+
+        # -- grid arithmetic: floor-div without exactness evidence ------
+        for elt in grid_elts:
+            findings.extend(
+                self._check_grid_elt(module, func, elt, depth=0)
+            )
+
+        # -- BlockSpecs -------------------------------------------------
+        for spec in self._iter_blockspecs(module, func, kwargs):
+            findings.extend(
+                self._check_blockspec(module, func, spec, grid_len)
+            )
+        return findings
+
+    def _resolve_grid(self, module, func, grid_node):
+        """Resolve the grid expression to (length | None, element nodes)."""
+        if grid_node is None:
+            return None, []
+        node = grid_node
+        if isinstance(node, ast.Name) and func is not None:
+            assign = _nearest_assignment(func, node.id, node.lineno)
+            if assign is not None:
+                node = assign
+        if isinstance(node, ast.Tuple):
+            return len(node.elts), list(node.elts)
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return 1, [node]
+        return None, []
+
+    def _check_grid_elt(self, module, func, elt, depth):
+        """Flag ``a // b`` grid terms lacking exactness evidence.
+
+        Exact-by-construction divisions are exempt: the numerator was
+        produced by ``cdiv(x, b) * b`` / ``round_up(x, b)``, or the
+        enclosing function asserts ``a % b == 0``.  Everything else
+        silently drops the operand tail — use cdiv.
+        """
+        findings = []
+        if depth > 4 or func is None:
+            return findings
+        # Chase names one level: grid elements are often precomputed.
+        if isinstance(elt, ast.Name):
+            assign = _nearest_assignment(func, elt.id, elt.lineno + 1)
+            if assign is not None:
+                return self._check_grid_elt(module, func, assign, depth + 1)
+            return findings
+        for node in ast.walk(elt):
+            if not (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.FloorDiv)):
+                continue
+            if self._division_is_exact(module, func, node):
+                continue
+            findings.append(self.finding(
+                module, node,
+                "floor-div in Pallas grid arithmetic without exactness "
+                "evidence (no cdiv/round_up provenance, no `% == 0` "
+                "assert): tiles past the operand tail are silently "
+                "skipped; use cdiv",
+            ))
+        return findings
+
+    def _division_is_exact(self, module, func, binop):
+        num_s = _expr_str(module, binop.left)
+        den_s = _expr_str(module, binop.right)
+        # (a) an assert in the function proves num % den == 0
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Assert):
+                continue
+            for cmp in ast.walk(node.test):
+                if (isinstance(cmp, ast.BinOp)
+                        and isinstance(cmp.op, ast.Mod)
+                        and _expr_str(module, cmp.left) == num_s
+                        and _expr_str(module, cmp.right) == den_s):
+                    return True
+        # (b) the numerator is cdiv(x, den) * den or round_up(x, den)
+        if isinstance(binop.left, ast.Name):
+            assign = _nearest_assignment(func, binop.left.id, binop.lineno)
+            if assign is not None and self._is_rounded_multiple(
+                module, assign, den_s
+            ):
+                return True
+        return self._is_rounded_multiple(module, binop.left, den_s)
+
+    def _is_rounded_multiple(self, module, node, den_s):
+        """Is ``node`` of the form cdiv(x, d)*d or round_up(x, d) with
+        d == the divisor (or a multiple expression containing it)?"""
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult)):
+            for side, other in ((node.left, node.right),
+                                (node.right, node.left)):
+                if (_expr_str(module, other) == den_s
+                        and isinstance(side, ast.Call)
+                        and _callee_name(module, side) in ("cdiv",)):
+                    return True
+        if isinstance(node, ast.Call) and _callee_name(module, node) in (
+            "round_up",
+        ):
+            if len(node.args) == 2 and _expr_str(
+                module, node.args[1]
+            ) == den_s:
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+
+    def _iter_blockspecs(self, module, func, kwargs):
+        """Yield every BlockSpec Call reachable from in_specs/out_specs."""
+        for key in ("in_specs", "out_specs"):
+            node = kwargs.get(key)
+            if node is None:
+                continue
+            if isinstance(node, ast.Name) and func is not None:
+                resolved = _nearest_assignment(func, node.id, node.lineno)
+                if resolved is not None:
+                    node = resolved
+            stack = [node]
+            while stack:
+                cur = stack.pop()
+                if isinstance(cur, (ast.List, ast.Tuple)):
+                    stack.extend(cur.elts)
+                elif isinstance(cur, ast.IfExp):
+                    stack.extend([cur.body, cur.orelse])
+                elif isinstance(cur, ast.Call):
+                    cname = module.resolver.dotted(cur.func) or ""
+                    if cname.endswith("BlockSpec"):
+                        yield cur
+
+    def _check_blockspec(self, module, func, spec, grid_len):
+        findings = []
+        kwargs = {kw.arg: kw.value for kw in spec.keywords if kw.arg}
+        shape_node = spec.args[0] if spec.args else kwargs.get(
+            "block_shape"
+        )
+        map_node = spec.args[1] if len(spec.args) > 1 else kwargs.get(
+            "index_map"
+        )
+        shape_lens = set(self._tuple_lens(shape_node))
+        for lam in self._iter_lambdas(module, func, map_node):
+            n_pos = len(lam.args.args) - len(lam.args.defaults)
+            if grid_len is not None and n_pos != grid_len:
+                findings.append(self.finding(
+                    module, lam,
+                    f"BlockSpec index map takes {n_pos} positional "
+                    f"grid argument(s) but the grid has {grid_len} "
+                    "axis/axes: the map does not cover the grid",
+                ))
+            ret_lens = {
+                len(lam.body.elts)
+            } if isinstance(lam.body, ast.Tuple) else set()
+            if shape_lens and ret_lens and not (shape_lens & ret_lens):
+                findings.append(self.finding(
+                    module, lam,
+                    f"BlockSpec index map returns "
+                    f"{sorted(ret_lens)[0]} coordinate(s) but the block "
+                    f"shape has {sorted(shape_lens)[0]} axis/axes: "
+                    "block addressing is misaligned",
+                ))
+        return findings
+
+    def _tuple_lens(self, node):
+        """Possible block-shape tuple lengths (IfExp yields both arms)."""
+        if node is None:
+            return []
+        if isinstance(node, ast.Tuple):
+            return [len(node.elts)]
+        if isinstance(node, ast.IfExp):
+            return self._tuple_lens(node.body) + self._tuple_lens(
+                node.orelse
+            )
+        return []
+
+    def _iter_lambdas(self, module, func, node):
+        if node is None:
+            return
+        if isinstance(node, ast.Lambda):
+            yield node
+        elif isinstance(node, ast.IfExp):
+            yield from self._iter_lambdas(module, func, node.body)
+            yield from self._iter_lambdas(module, func, node.orelse)
+        elif isinstance(node, ast.Name) and func is not None:
+            # A named map may be bound in several branches; check each.
+            for assign_val in _all_assignments(func, node.id):
+                if isinstance(assign_val, (ast.Lambda, ast.IfExp)):
+                    yield from self._iter_lambdas(module, func, assign_val)
+
+
+# --------------------------------------------------------------------------
+# Local constant-ish propagation helpers
+
+
+def _nearest_assignment(func, name, before_line):
+    """The value of the lexically nearest ``name = ...`` above a line."""
+    best, best_line = None, -1
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Assign):
+            continue
+        if node.lineno >= before_line or node.lineno <= best_line:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name) and tgt.id == name:
+                best, best_line = node.value, node.lineno
+    return best
+
+
+def _all_assignments(func, name):
+    out = []
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    out.append(node.value)
+    return out
+
+
+def _expr_str(module, node):
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - ancient nodes
+        return ast.dump(node)
+
+
+def _callee_name(module, call):
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None

@@ -1,0 +1,217 @@
+"""Rules R001–R003: host-sync budgets, recompile hazards, donation.
+
+These three rules guard the serve tier's core perf contract (DESIGN.md
+§5.1): the chunked decode loop pays exactly one device→host sync per
+chunk, the jitted dispatch never retraces on Python values, and buffers
+donated to ``jax.jit`` are dead after the call.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint.core import Rule, register
+from repro.lint.dataflow import collect_jit_bindings
+
+
+@register
+class HostSyncInHotLoop(Rule):
+    id = "R001"
+    title = "host-sync-in-hot-loop"
+    invariant = (
+        "Device->host syncs (.item(), int()/float()/bool() on traced "
+        "values, np.asarray/jax.device_get on device arrays, implicit "
+        "bool of a device array) must not appear inside jit-traced code "
+        "at all, and must not run per-iteration inside Python loops — "
+        "batch them through one jax.device_get per chunk/wave (the "
+        "PR 2 serve loop's '1 host sync per chunk' contract)."
+    )
+
+    def check(self, module):
+        findings = []
+        for ev in module.analysis.events:
+            if ev.kind == "sync":
+                if ev.traced is not None:
+                    findings.append(self.finding(
+                        module, ev.node,
+                        f"host sync ({ev.detail}) inside jit-traced code: "
+                        "forces a trace-time transfer or fails under jit; "
+                        "hoist it out of the traced region",
+                    ))
+                elif ev.loop_depth > 0:
+                    findings.append(self.finding(
+                        module, ev.node,
+                        f"per-iteration host sync ({ev.detail}) inside a "
+                        "loop: each iteration blocks on the device; batch "
+                        "via a single jax.device_get outside the loop",
+                    ))
+            elif ev.kind == "branch_device" and ev.traced is None:
+                findings.append(self.finding(
+                    module, ev.node,
+                    "implicit bool() of a device array in a "
+                    f"{ev.detail} test is a hidden host sync; compute "
+                    "the predicate on host or batch the transfer",
+                ))
+        return findings
+
+
+@register
+class RecompileHazard(Rule):
+    id = "R002"
+    title = "recompile-hazard"
+    invariant = (
+        "Inside jit-traced code, shapes and control flow must depend "
+        "only on static values (literals, .shape, static_argnames); "
+        "branching or shape construction from traced values retraces "
+        "per distinct value, and jax.jit called inside a loop defeats "
+        "the compile cache (the PlanCache fingerprinting discipline of "
+        "core/planner.py applied to the serve tier)."
+    )
+
+    def check(self, module):
+        findings = []
+        for ev in module.analysis.events:
+            if ev.kind == "branch_device" and ev.traced is not None:
+                findings.append(self.finding(
+                    module, ev.node,
+                    "Python branch on a traced value inside jit-traced "
+                    "code: triggers ConcretizationError or a retrace per "
+                    "value; use lax.cond/jnp.where or mark the argument "
+                    "static",
+                ))
+            elif ev.kind == "shape_traced":
+                findings.append(self.finding(
+                    module, ev.node,
+                    f"{ev.detail} shape depends on a traced value inside "
+                    "jit-traced code: every distinct value recompiles; "
+                    "derive shapes from .shape/static args",
+                ))
+            elif ev.kind == "jit_in_loop":
+                findings.append(self.finding(
+                    module, ev.node,
+                    "jax.jit(...) constructed inside a loop: each "
+                    "iteration builds a fresh callable and misses the "
+                    "compile cache; hoist the jit wrapping out of the "
+                    "loop",
+                ))
+        return findings
+
+
+@register
+class DonationViolation(Rule):
+    id = "R003"
+    title = "donation-violation"
+    invariant = (
+        "A buffer passed at a donate_argnums position of a jitted call "
+        "is invalidated by that call; reading it afterwards (before "
+        "rebinding) returns garbage or errors on non-CPU backends. The "
+        "serve engine relies on this for its in-place KV/cursor update "
+        "(engine.__init__ donates cache/cursor state back to itself)."
+    )
+
+    def check(self, module):
+        findings = []
+        bindings = collect_jit_bindings(
+            module.tree, module.resolver, module.jit_index
+        )
+        donating = {t: b for t, b in bindings.items() if b.donate_argnums}
+        if not donating:
+            return findings
+        for call in ast.walk(module.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            raw = module.resolver.raw_dotted(call.func)
+            if raw not in donating:
+                continue
+            binding = donating[raw]
+            donated = []
+            for idx in binding.donate_argnums:
+                if idx < len(call.args):
+                    expr = module.resolver.raw_dotted(call.args[idx])
+                    if expr:
+                        donated.append(expr)
+            if not donated:
+                continue
+            findings.extend(
+                self._check_liveness(module, call, donated)
+            )
+        return findings
+
+    def _check_liveness(self, module, call, donated):
+        """Flag loads of donated expressions after the donating call."""
+        func = module.enclosing_function(call)
+        if func is None:
+            return []
+        # The statement containing the call; its Assign targets rebind.
+        stmt = call
+        for anc in module.ancestors(call):
+            if isinstance(anc, ast.stmt):
+                stmt = anc
+                break
+        killed = set()
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                killed.update(_target_names(module, tgt))
+        end = getattr(stmt, "end_lineno", stmt.lineno)
+        findings = []
+        live = [d for d in donated if d not in killed]
+        if not live:
+            return findings
+        # Linear scan of subsequent statements in source order: a load
+        # before a rebind of the same expression is a violation.
+        events = []
+        for node in ast.walk(func):
+            if not isinstance(node, ast.stmt) or node.lineno <= end:
+                continue
+            for tgt, val in _stores_of(node):
+                for name in _target_names(module, tgt):
+                    events.append((node.lineno, 0, "store", name, node))
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Name, ast.Attribute)) and isinstance(
+                    getattr(sub, "ctx", None), ast.Load
+                ):
+                    expr = module.resolver.raw_dotted(sub)
+                    if expr in live:
+                        # Skip loads nested inside a larger matching
+                        # attribute chain (counted at the chain root).
+                        events.append(
+                            (sub.lineno, sub.col_offset, "load", expr, sub)
+                        )
+        events.sort(key=lambda e: (e[0], e[1]))
+        dead = set(live)
+        for _, _, kind, name, node in events:
+            if kind == "store":
+                dead.discard(name)
+            elif kind == "load" and name in dead:
+                findings.append(self.finding(
+                    module, node,
+                    f"`{name}` was donated to `{module.resolver.raw_dotted(call.func)}` "
+                    f"(line {call.lineno}) and read afterwards without "
+                    "rebinding: donated buffers are invalidated by the "
+                    "call",
+                ))
+                dead.discard(name)  # one finding per donated expr
+        return findings
+
+
+def _target_names(module, target):
+    names = []
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            names.extend(_target_names(module, elt))
+    elif isinstance(target, ast.Starred):
+        names.extend(_target_names(module, target.value))
+    else:
+        expr = module.resolver.raw_dotted(target)
+        if expr:
+            names.append(expr)
+    return names
+
+
+def _stores_of(stmt):
+    if isinstance(stmt, ast.Assign):
+        return [(t, stmt.value) for t in stmt.targets]
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [(stmt.target, stmt.value)]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [(stmt.target, stmt.iter)]
+    return []

@@ -1394,7 +1394,11 @@ class ServeEngine:
         already did (``pools``)."""
         if pools is None:
             leaves = jax.tree_util.tree_leaves(self.cache)
-            pools = [np.asarray(leaves[i]) for i in self._pool_leaf_ids(leaves)]
+            # One batched transfer for every pool leaf (R001): per-leaf
+            # np.asarray would pay one blocking round-trip per leaf.
+            pools = jax.device_get(
+                [leaves[i] for i in self._pool_leaf_ids(leaves)]
+            )
             self.stats["host_syncs"] += 1
         out = {}
         for p in pages:
@@ -1437,7 +1441,12 @@ class ServeEngine:
         chaos corruption runs bit-identical."""
         self.stats["integrity_sweeps"] += 1
         leaves = jax.tree_util.tree_leaves(self.cache)
-        pools = [np.asarray(leaves[i]) for i in self._pool_leaf_ids(leaves)]
+        # Batched pull (R001): the sweep's "one host sync" accounting was
+        # only honest when the pool had a single leaf; per-leaf
+        # np.asarray paid one blocking round-trip per pool leaf.
+        pools = jax.device_get(
+            [leaves[i] for i in self._pool_leaf_ids(leaves)]
+        )
         self.stats["host_syncs"] += 1
         new = self._sealed_pages() - self._page_fp.keys()
         if new:

@@ -47,9 +47,12 @@ def save(state: Any, directory: str, step: int, keep: int = 3) -> str:
     os.makedirs(tmp)
 
     leaves = _leaf_paths(state)
+    # One batched transfer for the whole tree (R001): per-leaf
+    # device_get pays one blocking device round-trip per parameter.
+    host_leaves = jax.device_get([leaf for _, leaf in leaves])
     manifest = {"step": step, "leaves": []}
-    for i, (path, leaf) in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
+    for i, ((path, _), arr) in enumerate(zip(leaves, host_leaves)):
+        arr = np.asarray(arr)
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"].append(

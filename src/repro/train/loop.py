@@ -83,11 +83,15 @@ def run(
     steps_in_run = 0
     try:
         while step < config.total_steps:
-            t0 = time.time()
+            # perf_counter, not time.time (R004): an NTP step would make
+            # dt negative/huge and poison the straggler-watchdog EWMA.
+            t0 = time.perf_counter()
             batch = data_source(step)
             state, metrics = train_step(state, batch)
-            loss = float(jax.device_get(metrics["loss"]))
-            dt = time.time() - t0
+            # Per-step sync is the NaN fuse: the next line must observe
+            # this step's loss before we commit to another step.
+            loss = float(jax.device_get(metrics["loss"]))  # repro-lint: disable=R001 -- NaN fuse requires per-step observation
+            dt = time.perf_counter() - t0
             report.step_times.append(dt)
 
             if not np.isfinite(loss):

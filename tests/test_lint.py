@@ -1,0 +1,659 @@
+"""repro.lint: per-rule positive/negative fixtures, suppression and
+baseline round-trips, CLI exit codes, and the repo self-check.
+
+Fixture snippets are deliberately tiny and self-contained: each one
+isolates exactly the pattern a rule must (or must not) flag, so a rule
+regression points at one failing fixture instead of a pile of repo
+findings.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.lint import (
+    all_rules,
+    analyze_source,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+from repro.lint.baseline import filter_findings
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(code, path="src/repro/serve/mod.py", rules=None):
+    findings, _ = analyze_source(textwrap.dedent(code), path=path,
+                                 rules=rules)
+    return findings
+
+
+def rule_ids(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------------------
+# Registry
+
+
+def test_at_least_six_active_rules():
+    ids = [r.id for r in all_rules()]
+    assert len(ids) >= 6
+    assert ids == sorted(ids)
+    for rid in ("R001", "R002", "R003", "R004", "R005", "R006"):
+        assert rid in ids
+
+
+# --------------------------------------------------------------------------
+# R001 host-sync-in-hot-loop
+
+
+def test_r001_asarray_on_device_in_loop():
+    findings = lint("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def f(n):
+            x = jnp.zeros((4,))
+            out = []
+            for _ in range(n):
+                out.append(np.asarray(x))
+            return out
+    """)
+    assert "R001" in rule_ids(findings)
+
+
+def test_r001_item_in_loop():
+    findings = lint("""
+        import jax.numpy as jnp
+
+        def f(flags):
+            x = jnp.zeros(())
+            total = 0.0
+            for _ in flags:
+                total += x.item()
+            return total
+    """)
+    assert "R001" in rule_ids(findings)
+
+
+def test_r001_device_get_inside_jit():
+    findings = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return jax.device_get(x)
+    """)
+    assert "R001" in rule_ids(findings)
+    assert "inside jit-traced code" in findings[0].message
+
+
+def test_r001_implicit_bool_of_device_array():
+    findings = lint("""
+        import jax.numpy as jnp
+
+        def f():
+            x = jnp.ones((3,))
+            if x.sum() > 0:
+                return 1
+            return 0
+    """)
+    assert "R001" in rule_ids(findings)
+
+
+def test_r001_negative_batched_device_get_outside_loop():
+    findings = lint("""
+        import jax
+        import jax.numpy as jnp
+
+        def f(n):
+            xs = [jnp.zeros((4,)) for _ in range(n)]
+            host = jax.device_get(xs)     # one batched transfer
+            return [h.sum() for h in host]
+    """)
+    assert "R001" not in rule_ids(findings)
+
+
+def test_r001_negative_numpy_only_loop():
+    findings = lint("""
+        import numpy as np
+
+        def f(n):
+            x = np.zeros((4,))
+            out = []
+            for _ in range(n):
+                out.append(np.asarray(x))   # host->host, free
+            return out
+    """)
+    assert "R001" not in rule_ids(findings)
+
+
+# --------------------------------------------------------------------------
+# R002 recompile-hazard
+
+
+def test_r002_branch_on_traced_value():
+    findings = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert "R002" in rule_ids(findings)
+
+
+def test_r002_traced_shape():
+    findings = lint("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(n):
+            return jnp.zeros((n,))
+    """)
+    assert "R002" in rule_ids(findings)
+
+
+def test_r002_jit_inside_loop():
+    findings = lint("""
+        import jax
+
+        def f(fns, x):
+            out = []
+            for _ in range(3):
+                g = jax.jit(step)
+                out.append(g(x))
+            return out
+    """)
+    assert "R002" in rule_ids(findings)
+
+
+def test_r002_negative_static_argnames():
+    findings = lint("""
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            if n > 2:
+                return jnp.zeros((n,))
+            return x
+    """)
+    assert "R002" not in rule_ids(findings)
+
+
+def test_r002_negative_is_none_and_shape_derived():
+    findings = lint("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, lengths=None):
+            b, d = x.shape
+            if lengths is None:
+                lengths = jnp.full((b,), d)
+            return jnp.zeros((b, d)) + lengths[:, None]
+    """)
+    assert rule_ids(findings) == []
+
+
+# --------------------------------------------------------------------------
+# R003 donation-violation
+
+
+def test_r003_read_after_donation():
+    findings = lint("""
+        import jax
+
+        def g(a, b):
+            return a + b
+
+        gg = jax.jit(g, donate_argnums=(0,))
+
+        def caller(x, y):
+            z = gg(x, y)
+            return x + z
+    """)
+    assert "R003" in rule_ids(findings)
+    assert "donated" in findings[0].message
+
+
+def test_r003_negative_rebound_target():
+    findings = lint("""
+        import jax
+
+        def g(a, b):
+            return a + b
+
+        gg = jax.jit(g, donate_argnums=(0,))
+
+        def caller(x, y):
+            x = gg(x, y)
+            return x + 1
+    """)
+    assert "R003" not in rule_ids(findings)
+
+
+def test_r003_self_attribute_round_trip():
+    # The engine idiom: donated self-attrs reassigned by the same
+    # statement are fine; a forgotten one is not.
+    findings = lint("""
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+
+            def _step_fn(self, cache, tok):
+                return cache, tok
+
+            def good(self, tok):
+                self.cache, self.tok = self._step(self.cache, self.tok)
+                return self.tok
+
+            def bad(self, tok):
+                out = self._step(self.cache, self.tok)
+                return self.cache
+    """)
+    assert [f.symbol for f in findings if f.rule == "R003"] == ["Eng.bad"]
+
+
+# --------------------------------------------------------------------------
+# R004 nondeterminism
+
+
+def test_r004_set_iteration():
+    findings = lint("""
+        def dispatch(items, handle):
+            for x in set(items):
+                handle(x)
+    """)
+    assert "R004" in rule_ids(findings)
+
+
+def test_r004_negative_sorted_set():
+    findings = lint("""
+        def dispatch(items, handle):
+            for x in sorted(set(items)):
+                handle(x)
+            drift = sorted(k for k in set(items) | {0})
+            return drift
+    """)
+    assert "R004" not in rule_ids(findings)
+
+
+def test_r004_time_time_in_serve_tier_only():
+    code = """
+        import time
+
+        def stamp():
+            return time.time()
+    """
+    assert "R004" in rule_ids(lint(code, path="src/repro/serve/x.py"))
+    assert "R004" not in rule_ids(lint(code, path="benchmarks/x.py"))
+
+
+def test_r004_unseeded_rng():
+    findings = lint("""
+        import numpy as np
+
+        def f():
+            good = np.random.default_rng(42)
+            bad = np.random.default_rng()
+            return good, bad
+    """)
+    r4 = [f for f in findings if f.rule == "R004"]
+    assert len(r4) == 1
+    assert "default_rng" in r4[0].message
+
+
+# --------------------------------------------------------------------------
+# R005 refcount-balance
+
+
+def test_r005_dropped_alloc_result():
+    findings = lint("""
+        def f(allocator):
+            allocator.alloc(3)
+    """)
+    assert "R005" in rule_ids(findings)
+    assert "dropped" in findings[0].message
+
+
+def test_r005_unchecked_share():
+    findings = lint("""
+        def f(allocator, pages):
+            allocator.share(pages)
+    """)
+    assert "R005" in rule_ids(findings)
+
+
+def test_r005_branch_leak():
+    findings = lint("""
+        def f(allocator, flag):
+            ids = allocator.alloc(2)
+            if ids is None:
+                return None
+            if flag:
+                allocator.release(ids)
+            return 1
+    """)
+    assert "R005" in rule_ids(findings)
+
+
+def test_r005_negative_balanced_paths():
+    findings = lint("""
+        def f(allocator, flag):
+            ids = allocator.alloc(2)
+            if ids is None:
+                return None
+            if flag:
+                allocator.release(ids)
+                return None
+            return ids
+    """)
+    assert "R005" not in rule_ids(findings)
+
+
+def test_r005_negative_escape_into_owned_state():
+    findings = lint("""
+        def f(self, allocator, slot):
+            ids = allocator.alloc(2)
+            if ids is None:
+                return False
+            self.slot_pages[slot] = ids
+            return True
+    """)
+    assert "R005" not in rule_ids(findings)
+
+
+def test_r005_negative_raising_path_exempt():
+    findings = lint("""
+        def f(allocator):
+            ids = allocator.alloc(2)
+            if ids is None:
+                raise MemoryError("pool exhausted")
+            return ids
+    """)
+    assert "R005" not in rule_ids(findings)
+
+
+# --------------------------------------------------------------------------
+# R006 pallas-grid-shape
+
+
+PALLAS_PREAMBLE = """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from repro.kernels.common import cdiv
+
+    def k(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+"""
+
+
+def test_r006_index_map_arity_mismatch():
+    findings = lint(PALLAS_PREAMBLE + """
+        def call(x):
+            return pl.pallas_call(
+                k,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+    """)
+    r6 = [f for f in findings if f.rule == "R006"]
+    assert len(r6) == 1
+    assert "does not cover the grid" in r6[0].message
+
+
+def test_r006_return_length_mismatch():
+    findings = lint(PALLAS_PREAMBLE + """
+        def call(x):
+            return pl.pallas_call(
+                k,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i,))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+    """)
+    r6 = [f for f in findings if f.rule == "R006"]
+    assert len(r6) == 1
+    assert "misaligned" in r6[0].message
+
+
+def test_r006_floor_div_grid_without_evidence():
+    findings = lint(PALLAS_PREAMBLE + """
+        def call(x, n):
+            return pl.pallas_call(
+                k,
+                grid=(n // 8,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            )(x)
+    """)
+    r6 = [f for f in findings if f.rule == "R006"]
+    assert len(r6) == 1
+    assert "cdiv" in r6[0].message
+
+
+def test_r006_negative_ceil_div_idioms():
+    findings = lint(PALLAS_PREAMBLE + """
+        def call_cdiv(x, n):
+            return pl.pallas_call(
+                k,
+                grid=(cdiv(n, 8),),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            )(x)
+
+        def call_padded(x, n):
+            n_pad = cdiv(n, 8) * 8
+            grid = (n_pad // 8,)
+            return pl.pallas_call(
+                k,
+                grid=grid,
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            )(x)
+
+        def call_asserted(x, n):
+            assert n % 8 == 0
+            return pl.pallas_call(
+                k,
+                grid=(n // 8,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            )(x)
+    """)
+    assert "R006" not in rule_ids(findings)
+
+
+def test_r006_keyword_defaults_excluded_from_arity():
+    # The decode-attention idiom: trailing kw-defaulted lambda params
+    # carry closure constants and don't consume grid axes.
+    findings = lint(PALLAS_PREAMBLE + """
+        def call(x, steps):
+            return pl.pallas_call(
+                k,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec(
+                    (8, 8), lambda i, j, ks=steps: (i, j))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+    """)
+    assert "R006" not in rule_ids(findings)
+
+
+# --------------------------------------------------------------------------
+# Suppression + baseline
+
+
+def test_inline_suppression_same_line():
+    code = textwrap.dedent("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def f(n):
+            x = jnp.zeros((4,))
+            out = []
+            for _ in range(n):
+                out.append(np.asarray(x))  # repro-lint: disable=R001 -- fixture
+            return out
+    """)
+    findings, suppressed = analyze_source(code, path="src/repro/serve/m.py")
+    assert "R001" not in rule_ids(findings)
+    assert suppressed == 1
+
+
+def test_inline_suppression_preceding_line():
+    code = textwrap.dedent("""
+        import time
+
+        def stamp():
+            # repro-lint: disable=R004 -- wall-clock timestamp is the point
+            return time.time()
+    """)
+    findings, suppressed = analyze_source(code, path="src/repro/serve/m.py")
+    assert "R004" not in rule_ids(findings)
+    assert suppressed == 1
+
+
+def test_suppression_is_rule_specific():
+    code = textwrap.dedent("""
+        import time
+
+        def stamp():
+            return time.time()  # repro-lint: disable=R001 -- wrong rule id
+    """)
+    findings, suppressed = analyze_source(code, path="src/repro/serve/m.py")
+    assert "R004" in rule_ids(findings)
+    assert suppressed == 0
+
+
+def test_baseline_round_trip(tmp_path):
+    bad = tmp_path / "serve"
+    bad.mkdir()
+    (bad / "mod.py").write_text(textwrap.dedent("""
+        import time
+
+        def stamp():
+            return time.time()
+
+        def leak(allocator):
+            allocator.alloc(2)
+    """))
+    # The /serve/ path segment puts the fixture in the deterministic tier.
+    first = run_lint([str(tmp_path)], root=str(tmp_path.parent))
+    assert len(first.findings) == 2
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(str(bl_path), first.findings, reason="fixture")
+    baseline = load_baseline(str(bl_path))
+    second = run_lint([str(tmp_path)], baseline=baseline,
+                      root=str(tmp_path.parent))
+    assert second.findings == []
+    assert second.baseline_suppressed == 2
+    # A NEW finding in a baselined file still fails.
+    (bad / "mod.py").write_text(
+        (bad / "mod.py").read_text()
+        + "\ndef stamp2():\n    return time.time()\n"
+    )
+    third = run_lint([str(tmp_path)], baseline=baseline,
+                     root=str(tmp_path.parent))
+    assert len(third.findings) == 1
+    assert third.findings[0].symbol == "stamp2"
+
+
+def test_filter_findings_counts_within_symbol(tmp_path):
+    mod = tmp_path / "serve"
+    mod.mkdir()
+    (mod / "m.py").write_text(textwrap.dedent("""
+        import time
+
+        def f():
+            a = time.time()
+            b = time.time()
+            return a + b
+    """))
+    first = run_lint([str(tmp_path)], root=str(tmp_path.parent))
+    assert len(first.findings) == 2
+    baseline = {("R004", f"{tmp_path.name}/serve/m.py", "f"): 1}
+    kept, suppressed = filter_findings(first.findings, baseline)
+    assert suppressed == 1 and len(kept) == 1
+
+
+# --------------------------------------------------------------------------
+# CLI
+
+
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.lint", *args],
+        capture_output=True, text=True, cwd=cwd,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+
+
+def test_cli_exits_nonzero_on_seeded_violation(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def f(n):
+            x = jnp.zeros((4,))
+            return [float(np.asarray(x).sum()) or float(x[0])
+                    for _ in range(n)]
+    """))
+    proc = _run_cli([str(bad), "--no-baseline", "--json", "-"], tmp_path)
+    assert proc.returncode == 1, proc.stderr
+    report = json.loads(proc.stdout)
+    assert len(report["rules_run"]) >= 6
+    assert report["findings"]
+    assert {"rule", "path", "line", "col", "symbol", "message"} <= set(
+        report["findings"][0]
+    )
+    assert "wall_s" in report and "baseline_suppressed" in report
+
+
+def test_cli_exits_zero_on_clean_file(tmp_path):
+    good = tmp_path / "good.py"
+    good.write_text("def f(x):\n    return x + 1\n")
+    proc = _run_cli([str(good), "--no-baseline"], tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_list_rules(tmp_path):
+    proc = _run_cli(["--list-rules"], tmp_path)
+    assert proc.returncode == 0
+    for rid in ("R001", "R002", "R003", "R004", "R005", "R006"):
+        assert rid in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# Repo self-check: the tree lints clean modulo the committed baseline
+
+
+def test_repo_lints_clean_modulo_baseline():
+    baseline_path = REPO / "lint_baseline.json"
+    assert baseline_path.is_file(), "committed baseline missing"
+    baseline = load_baseline(str(baseline_path))
+    result = run_lint(
+        [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "examples")],
+        baseline=baseline,
+        root=str(REPO),
+    )
+    assert not result.errors, result.errors
+    rendered = "\n".join(f.render() for f in result.findings)
+    assert not result.findings, f"repo has lint findings:\n{rendered}"
+    assert len(result.rules_run) >= 6
