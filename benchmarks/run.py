@@ -159,10 +159,17 @@ def main(argv=None) -> None:
             # corruption leg must detect, quarantine and heal.
             recovery_rows, recovery_summary = serve_bench.recovery_rows()
             _emit(recovery_rows, rows)
+            # Adaptive cache policy: static/pinned/adaptive legs must be
+            # bit-identical; adaptive must match the best static stance
+            # on prefill work and clear the warm re-arrival TTFT floor.
+            adaptive_rows, adaptive_summary = serve_bench.adaptive_rows(
+                reps=max(1, args.reps)
+            )
+            _emit(adaptive_rows, rows)
             serve_summary = {**serve_summary, **paged_summary,
                              **family_summary, **spec_summary,
                              **prefix_summary, **chaos_summary,
-                             **recovery_summary}
+                             **recovery_summary, **adaptive_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
 

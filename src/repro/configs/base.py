@@ -94,6 +94,19 @@ class ModelConfig:
     chaos_share_fail_p: float = 0.0    # P(injected share refusal) per share
     chaos_corrupt_p: float = 0.0       # P(bit-flip on a stamped page) per step
     chaos_crash_after_wave: int = 0    # raise ChaosCrash after wave N (0=off)
+    # Adaptive serve-tier cache policy (serve.adaptive, DESIGN.md §5.7):
+    # runtime counters (prefix hit rate, page reuse distance, spec
+    # acceptance, recompute cost) drive warm-prefix retention beyond
+    # refcount zero (bounded by warm_pages), cost-aware preemption victim
+    # selection, and per-workload-class policy selection through the
+    # core.sweep exact lattice argmin, re-planned every
+    # adaptive_replan_every admission waves.  Placement-only: every
+    # decision moves pages/slots, never tokens — outputs stay
+    # bit-identical to the static engine, so snapshot config fingerprints
+    # exclude all three knobs (like the chaos knobs).
+    adaptive: bool = False
+    warm_pages: int = 0                # warm-cache page budget (0 = no tier)
+    adaptive_replan_every: int = 4     # admission waves between re-plans
     # Numerics / sharding
     dtype: str = "bfloat16"
     vocab_pad_multiple: int = 2048   # pad vocab so `model` axis (16) divides it

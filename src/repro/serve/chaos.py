@@ -62,8 +62,8 @@ class ChaosAllocator(PageAllocator):
     """
 
     def __init__(self, n_pages: int, fail_p: float, seed: int = 0,
-                 share_fail_p: float = 0.0):
-        super().__init__(n_pages)
+                 share_fail_p: float = 0.0, warm_budget: int = 0):
+        super().__init__(n_pages, warm_budget=warm_budget)
         assert 0.0 <= fail_p <= 1.0, fail_p
         assert 0.0 <= share_fail_p <= 1.0, share_fail_p
         self.fail_p = fail_p

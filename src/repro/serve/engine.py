@@ -99,6 +99,7 @@ from repro.core.characterize import attention_op
 from repro.models import build_model
 from repro.models.common import paged_kv_spec
 from repro.serve import snapshot as snap
+from repro.serve.adaptive import AdaptivePolicy
 from repro.serve.alloc import PageAllocator  # noqa: F401  (re-export: the
 # allocator lives in serve.alloc since the chaos wrapper subclasses it;
 # property tests and older call sites import it from there)
@@ -279,6 +280,26 @@ class ServeEngine:
         self.prefix = (
             PrefixIndex(self.page_size) if self.prefix_sharing else None
         )
+        # Adaptive serve-tier cache policy (DESIGN.md §5.7): runtime
+        # counters drive warm prefix retention (bounded by
+        # cfg.warm_pages), cost-aware preemption victims, and per-class
+        # policy re-planning through core.sweep's exact lattice argmin.
+        # Placement-only by construction — the static path pays nothing.
+        # The warm tier needs re-attachable page KV (paged + prefix
+        # sharing); other engines keep victim costing + replans only.
+        self.adaptive: AdaptivePolicy | None = None
+        if cfg.adaptive:
+            self.adaptive = AdaptivePolicy(
+                warm_pages=(cfg.warm_pages
+                            if self.prefix is not None else 0),
+                replan_every=cfg.adaptive_replan_every,
+                page_size=self.page_size if self.paged else 1,
+                spec_k=self.spec_k if self.spec else 0,
+            )
+        self._warm_tier = (
+            self.adaptive is not None and self.adaptive.warm_pages > 0
+            and self.prefix is not None
+        )
         # Recurrent state (SSM/conv) has no per-position validity mask, so
         # the speculative rollback cannot be a cursor rewind: those
         # families re-run the verify block from the pre-verify cache with
@@ -368,9 +389,19 @@ class ServeEngine:
             "spec_rounds": 0,         # active draft/verify rounds
             "draft_proposed": 0,      # spec_k per active round
             "draft_accepted": 0,      # matching draft prefix per round
+            "admitted_fresh": 0,      # first-time admissions (no tokens yet)
+            "readmitted": 0,          # preemption-restore re-admissions
+            "prefill_work_tokens": 0,  # suffix tokens actually prefilled
+            "spec_tokens": 0,         # tokens emitted by draft/verify rounds
             "prefix_hits": 0,         # admissions that attached shared pages
+            "prefix_hits_fresh": 0,   # ... the fresh-admission subset
             "prefix_pages_shared": 0,  # shared-page references taken
             "prefix_tokens_shared": 0,  # prompt tokens not re-prefilled
+            "warm_retained": 0,       # pages parked in the warm tier
+            "warm_reclaimed": 0,      # warm pages returned to the free list
+            "warm_hits": 0,           # admissions that revived warm pages
+            "warm_tokens_saved": 0,   # prompt tokens attached from warm pages
+            "replans": 0,             # adaptive lattice re-plans run
             "peak_pages_held": 0,     # max concurrent pool usage (paged)
             "preempted": 0,           # mid-stream evictions (incl. forced)
             "preempted_forced": 0,    # chaos-forced subset
@@ -398,6 +429,7 @@ class ServeEngine:
         paths genuine exhaustion would.  Also the restore path's reset
         (``_hard_reset``), so a restored engine re-arms identically."""
         cfg = self.cfg
+        warm = cfg.warm_pages if cfg.adaptive else 0
         if cfg.chaos_alloc_fail_p > 0.0 or cfg.chaos_share_fail_p > 0.0:
             assert cfg.chaos_alloc_fail_p < 1.0, (
                 "chaos_alloc_fail_p must be < 1.0 or admission can "
@@ -409,9 +441,9 @@ class ServeEngine:
             )
             return ChaosAllocator(
                 self.n_pages, cfg.chaos_alloc_fail_p, cfg.chaos_seed,
-                share_fail_p=cfg.chaos_share_fail_p,
+                share_fail_p=cfg.chaos_share_fail_p, warm_budget=warm,
             )
-        return PageAllocator(self.n_pages)
+        return PageAllocator(self.n_pages, warm_budget=warm)
 
     # -- policy ------------------------------------------------------------
 
@@ -475,6 +507,22 @@ class ServeEngine:
             report["prefix_sharing"].update({
                 "trie_nodes": len(self.prefix),
                 "resident_prefix_tokens": self.prefix.resident_tokens(),
+            })
+        # Adaptive serve-tier policy (DESIGN.md §5.7) — a NEW top-level
+        # section so the schema-stable "lifecycle"/"integrity" blocks
+        # stay byte-compatible for their pinned consumers.
+        report["adaptive"] = {"enabled": self.adaptive is not None}
+        if self.adaptive is not None:
+            report["adaptive"].update({
+                "warm_tier": self._warm_tier,
+                "warm_pages_now": (
+                    self.allocator.warm_count() if self.paged else 0
+                ),
+                **{k: self.stats[k] for k in (
+                    "warm_retained", "warm_reclaimed", "warm_hits",
+                    "warm_tokens_saved", "replans",
+                )},
+                **self.adaptive.report(),
             })
         # Lifecycle / robustness (DESIGN.md §5.5).  Schema is stable —
         # benches and CI parse it; tests pin the full key set.
@@ -550,15 +598,20 @@ class ServeEngine:
             out["draft_accepted"] / out["draft_proposed"]
             if out["draft_proposed"] else 0.0
         )
+        # Spec-round-emitted tokens only: decode_tokens also counts plain
+        # chunks (spec disabled mid-run, non-spec phases), which would
+        # inflate the per-round figure.
         out["spec_tokens_per_round"] = (
-            out["decode_tokens"] / out["spec_rounds"]
+            out["spec_tokens"] / out["spec_rounds"]
             if out["spec_rounds"] else 0.0
         )
-        # Every admitted request emits exactly one prefill token, so
-        # prefill_tokens doubles as the admission count.
+        # Hit rate over FRESH admissions: prefill_tokens also counts
+        # preemption-restore recompute prefills, which deflated the rate
+        # under memory pressure (and a restore re-attach is not a new
+        # hit, so the numerator is the fresh subset too).
         out["prefix_hit_rate"] = (
-            out["prefix_hits"] / out["prefill_tokens"]
-            if out["prefill_tokens"] else 0.0
+            out["prefix_hits_fresh"] / out["admitted_fresh"]
+            if out["admitted_fresh"] else 0.0
         )
         out["goodput_under_deadline"] = self._goodput()
         return out
@@ -913,6 +966,12 @@ class ServeEngine:
         r.__dict__.pop("_prefix_chunks", None)
         if self.paged:
             freed = self.allocator.release(self._slot_pages[slot])
+            if self._warm_tier and freed:
+                # Adaptive retention (DESIGN.md §5.7): trie-registered
+                # prefix pages may park in the warm tier instead of
+                # freeing; what survives comes back shorn of its trie
+                # eviction and stamp drop below.
+                freed = self._maybe_retain(r, freed)
             if self.prefix is not None and freed:
                 self.prefix.evict(freed)
             for p in freed:
@@ -924,6 +983,88 @@ class ServeEngine:
             self._slot_pages[slot] = []
             self.page_table[slot] = -1
         self._dirty_slots.add(slot)
+
+    def _maybe_retain(self, r: Request, freed: list[int]) -> list[int]:
+        """Warm-retention pass over pages that just reached refcount zero
+        (DESIGN.md §5.7).  Returns the pages that must still be evicted
+        (trie node dropped, stamp shed); retained pages keep both — a
+        warm page's KV stays attachable until reclaimed.
+
+        Closure rules that keep the trie's leaf-upward eviction sound:
+
+        * retention goes shallowest-first and a page is retained only if
+          its parent is held, warm, or retained in this same pass — so
+          the warm set stays a depth-prefix of each chain;
+        * evicting a page whose descendants were retained EARLIER (by a
+          shorter sharer that finished first) reclaims that warm subtree
+          along with it — a trie node never outlives its parent.
+        """
+        key = getattr(r, "_adaptive_key", None)
+        kept: set[int] = set()
+        if key is not None:
+            deciding = getattr(r, "_adaptive_class", key)
+            quota = self.adaptive.retain_quota(key)
+            for p in sorted(freed,
+                            key=lambda q: (self.prefix.depth_of(q), q)):
+                depth = self.prefix.depth_of(p)
+                if depth <= 0:
+                    continue          # tail/decode page: never in the trie
+                if self.adaptive.class_warm_count(deciding) >= quota:
+                    break             # class share of the budget exhausted
+                parent = self.prefix.parent_page(p)
+                if depth > 1 and not (
+                        parent in kept
+                        or self.allocator.is_warm(parent)
+                        or self.allocator.ref_count(parent) > 0):
+                    continue          # chain cut above: stay a prefix
+                if self.allocator.retain(p):
+                    self.adaptive.note_retained(p, deciding)
+                    self.stats["warm_retained"] += 1
+                    kept.add(p)
+        evict = [p for p in freed if p not in kept]
+        # Warm-subtree closure on the evict side: descendants of an
+        # evicted page can only be warm (a held child implies a held
+        # parent) or in this same freed batch.
+        extra: list[int] = []
+        for p in evict:
+            for q in self.prefix.subtree_pages(p):
+                if (q != p and self.allocator.is_warm(q)
+                        and q not in extra):
+                    extra.append(q)
+        if extra:
+            self.allocator.reclaim(extra)
+            self.adaptive.note_reclaimed(extra)
+            self.stats["warm_reclaimed"] += len(extra)
+        return evict + extra
+
+    def _reclaim_warm(self, n_needed: int, protect: set[int]) -> int:
+        """Return up to ``n_needed`` warm pages to the free list so a
+        gated admission can allocate (reclaim-before-preempt).  The
+        adaptive rank orders candidates; each candidate takes its warm
+        subtree along (closure).  ``protect`` is the shared chain the
+        admission is about to revive — never reclaimed out from under
+        it.  Not policy-gated: capacity pressure always wins over
+        retention, so the warm tier can never starve admission."""
+        taken: list[int] = []
+        warm = sorted(self.allocator.warm_pages)
+        for p in self.adaptive.reclaim_order(warm):
+            if len(taken) >= n_needed:
+                break
+            if p in protect or p in taken:
+                continue
+            sub = [q for q in self.prefix.subtree_pages(p)
+                   if q not in taken]
+            if any(q in protect for q in sub):
+                continue
+            taken.extend(sub)
+        if taken:
+            self.prefix.evict(taken)
+            for q in taken:
+                self._page_fp.pop(q, None)
+            self.allocator.reclaim(taken)
+            self.adaptive.note_reclaimed(taken)
+            self.stats["warm_reclaimed"] += len(taken)
+        return len(taken)
 
     def _retire(self, r: Request, status: str) -> None:
         """Terminal transition for a non-finish exit (cancelled/expired)."""
@@ -957,14 +1098,24 @@ class ServeEngine:
 
     def _pick_victim(self, head: Request, wave_slots: set[int]
                      ) -> Request | None:
-        """Choose a preemption victim for the page-gated ``head``: the
-        YOUNGEST (most recently admitted) resident.  Anti-livelock double
-        guard: a head that was itself preempted never triggers another
-        preemption, and only never-preempted residents are eligible
-        victims — so natural preemptions are bounded by the request count
-        and a preempt/restore ping-pong cannot form.  Slots admitted
-        earlier in the current wave are off-limits (their prefill hasn't
-        run; evicting them would corrupt the wave's buffers)."""
+        """Choose a preemption victim for the page-gated ``head``.
+
+        Static engine: the YOUNGEST (most recently admitted) resident.
+        Adaptive engine (DESIGN.md §5.7): the CHEAPEST to recompute —
+        estimated replay tokens (prompt + emitted) discounted one page's
+        worth per page other slots still share (those pages stay
+        resident either way), ties youngest-first.  Victim choice is
+        placement-only: recompute-restore is bit-identical regardless of
+        who gets evicted, so the two engines may pick different victims
+        and still emit identical streams.
+
+        Anti-livelock double guard (both engines): a head that was
+        itself preempted never triggers another preemption, and only
+        never-preempted residents are eligible victims — so natural
+        preemptions are bounded by the request count and a
+        preempt/restore ping-pong cannot form.  Slots admitted earlier
+        in the current wave are off-limits (their prefill hasn't run;
+        evicting them would corrupt the wave's buffers)."""
         if not self.preemption or head.preempted_n > 0:
             return None
         cands = [
@@ -973,6 +1124,13 @@ class ServeEngine:
         ]
         if not cands:
             return None
+        if self.adaptive is not None:
+            return min(cands, key=lambda r: (
+                self.adaptive.victim_cost(
+                    r, self.allocator, self._slot_pages[r.slot]
+                ),
+                -r.admit_seq,
+            ))
         return max(cands, key=lambda r: r.admit_seq)
 
     def _preempt(self, victim: Request, forced: bool = False) -> None:
@@ -1061,15 +1219,45 @@ class ServeEngine:
                     chunks = self.prefix.chunks(eff)
                     head._prefix_chunks = chunks
                 shared, shared_len = self._shared_prefix(eff, chunks)
-            ids = self.allocator.alloc(need - len(shared))
+            n_fresh = need - len(shared)
+            if self._warm_tier:
+                # Capacity beats retention: before letting a short alloc
+                # gate (or preempt for) this head, reclaim warm pages the
+                # policy is merely speculating on.  The head's own shared
+                # chain is protected — reclaiming it would evict trie
+                # nodes we are about to attach.
+                short = n_fresh - self.allocator.free_count()
+                if short > 0 and self.allocator.warm_count():
+                    self._reclaim_warm(short, protect=set(shared))
+            ids = self.allocator.alloc(n_fresh)
             if ids is not None:
-                if not shared or self.allocator.share(shared):
+                # A shared chain may end in WARM pages (retained at
+                # refcount zero): those are revived to refcount 1, not
+                # share()d.  Held pages are always a chain prefix and
+                # warm ones a suffix (a held child implies a held
+                # parent), but membership — not position — is what the
+                # allocator cares about.
+                warm_set = (
+                    {p for p in shared if self.allocator.is_warm(p)}
+                    if self._warm_tier else set()
+                )
+                held_part = [p for p in shared if p not in warm_set]
+                if not held_part or self.allocator.share(held_part):
+                    if warm_set:
+                        warm_part = [p for p in shared if p in warm_set]
+                        self.allocator.revive(warm_part)
+                        self.adaptive.note_revived(warm_part)
+                        self.stats["warm_hits"] += 1
+                        self.stats["warm_tokens_saved"] += (
+                            len(warm_part) * self.page_size
+                        )
                     return shared + ids, chunks, shared_len
                 # Injected share refusal (ChaosAllocator): roll back the
                 # fresh alloc so the gated head leaves every refcount
                 # untouched — the same atomicity a failed alloc gives.
                 # The pages were never trie-registered or stamped, so the
-                # bare allocator release is the whole rollback.
+                # bare allocator release is the whole rollback.  Warm
+                # pages were not revived yet, so they need no rollback.
                 self.allocator.release(ids)
             victim = self._pick_victim(head, wave_slots)
             if victim is None:
@@ -1079,6 +1267,8 @@ class ServeEngine:
     def _admit_wave(self) -> None:
         if self._chaos_rng is not None:
             self._chaos_forced_preempt()
+        if self.adaptive is not None:
+            self.adaptive.begin_wave()
         # Wave entries carry the request's EFFECTIVE prompt (prompt +
         # previously emitted tokens for a preempted request being
         # restored, DESIGN.md §5.5) — everything downstream (page demand,
@@ -1120,8 +1310,29 @@ class ServeEngine:
                     # existing (shared) nodes.
                     self.prefix.register(eff, table[:len(chunks)],
                                          chunks=chunks)
+                    if self.adaptive is not None:
+                        # Classify by prompt content (first full page) and
+                        # remember which class DECIDES this request's
+                        # retention at release time.  A readmission keeps
+                        # its original deciding class — its effective
+                        # prompt grew, so re-hashing would re-classify.
+                        key = self.adaptive.class_key(chunks)
+                        head._adaptive_key = key
+                        if head.generated:
+                            head._adaptive_class = getattr(
+                                head, "_adaptive_class", key
+                            )
+                        else:
+                            head._adaptive_class = self.adaptive.note_arrival(
+                                key, len(eff),
+                                ((len(eff) - 1) // self.page_size)
+                                * self.page_size,
+                            )
+                        self.adaptive.touch(table)
                     if shared_len:
                         self.stats["prefix_hits"] += 1
+                        if not head.generated:
+                            self.stats["prefix_hits_fresh"] += 1
                         self.stats["prefix_pages_shared"] += (
                             shared_len // self.page_size
                         )
@@ -1141,7 +1352,13 @@ class ServeEngine:
             self._admit_seq += 1
             self.slot_req[slot] = head
             if head.generated:
+                # Preemption restore: its prefill replays work already
+                # done once, so it must NOT dilute fresh-admission rates
+                # (the serve_stats prefix_hit_rate bug this split fixes).
+                self.stats["readmitted"] += 1
                 self.stats["recompute_tokens"] += len(head.generated)
+            else:
+                self.stats["admitted_fresh"] += 1
             wave.append((slot, head, eff))
             wave_slots.add(slot)
         # Park slots vacated mid-stream (preempt/cancel/expire) that this
@@ -1186,6 +1403,11 @@ class ServeEngine:
         new_seeds = np.zeros((self.slots,), np.int32)
         for slot, r, eff in wave:
             n = len(eff) - r.prefix_tokens
+            # Actual prefill compute demand (suffix tokens only — shared
+            # or warm-revived prefixes cost nothing).  Unlike
+            # prefill_tokens (emitted first tokens) this measures WORK,
+            # which is what the adaptive-vs-static bench compares.
+            self.stats["prefill_work_tokens"] += n
             toks[slot, :n] = eff[r.prefix_tokens:]    # right-pad; drops
             if attached:
                 htoks[slot, :len(eff)] = eff
@@ -1223,6 +1445,14 @@ class ServeEngine:
         first = np.asarray(nxt)                # host sync: 1 per wave
         self.stats["host_syncs"] += 1
         self.stats["admission_waves"] += 1
+        if (self.adaptive is not None and self.adaptive.pinned is None
+                and self.stats["admission_waves"]
+                % self.adaptive.replan_every == 0):
+            # Re-plan boundary: feed the counters through the serve-policy
+            # lattice (core/sweep.py) and install per-class combos.
+            # Placement-only — outputs are bit-identical either way.
+            self.adaptive.replan(self.stats)
+            self.stats["replans"] += 1
         if self.paged:
             self.stats["peak_pages_held"] = max(
                 self.stats["peak_pages_held"],
@@ -1281,6 +1511,11 @@ class ServeEngine:
                 for t in t_np[j, slot][row]:
                     r.generated.append(int(t))
                 self.stats["decode_tokens"] += int(row.sum())
+                # Spec-round-emitted tokens in their OWN counter: the old
+                # spec_tokens_per_round divided ALL decode tokens (non-
+                # spec chunks included) by spec_rounds, inflating the
+                # ratio whenever plain decode ran in the same session.
+                self.stats["spec_tokens"] += int(row.sum())
                 self.stats["spec_rounds"] += 1
                 self.stats["draft_proposed"] += int(prop_np[j, slot])
                 self.stats["draft_accepted"] += int(acc_np[j, slot])
@@ -1304,6 +1539,11 @@ class ServeEngine:
 
         With quarantine (DESIGN.md §5.6) the pool partition is
         free + held + quarantined, and doomed pages are always held.
+        With the adaptive warm tier (DESIGN.md §5.7) it is
+        free + held + warm + quarantined; warm pages stay within budget,
+        are always trie-registered (warm retention exists only to keep
+        prefix nodes attachable), and keep their integrity stamps (their
+        content is live KV a future request may attach to).
         """
         self.stats["invariant_checks"] += 1
         queued = list(self.queue)
@@ -1352,6 +1592,7 @@ class ServeEngine:
             )
         free = self.allocator.free_pages
         quar = self.allocator.quarantined_pages
+        warm = self.allocator.warm_pages
         assert len(free) == len(set(free)) and not held & set(free)
         assert not quar & held and not quar & set(free), (
             f"quarantined pages back in circulation: "
@@ -1360,17 +1601,31 @@ class ServeEngine:
         assert self.allocator.doomed_pages <= held, (
             "doomed (pending-quarantine) pages must still be held"
         )
-        assert (sorted(list(free) + list(held) + list(quar))
-                == list(range(self.n_pages))), (
-            "free + held + quarantined is not a partition of the pool"
+        assert len(warm) <= self.allocator.warm_budget, (
+            f"warm tier over budget: {len(warm)} > "
+            f"{self.allocator.warm_budget}"
         )
-        assert not set(self._page_fp) - held, (
+        assert not warm & held and not warm & set(free) and not warm & quar, (
+            f"warm pages double-booked: {sorted(warm & (held | set(free) | quar))}"
+        )
+        assert (sorted(list(free) + list(held) + list(warm) + list(quar))
+                == list(range(self.n_pages))), (
+            "free + held + warm + quarantined is not a partition of the pool"
+        )
+        assert not set(self._page_fp) - held - warm, (
             f"integrity stamps outlive their pages: "
-            f"{sorted(set(self._page_fp) - held)}"
+            f"{sorted(set(self._page_fp) - held - warm)}"
         )
         if self.prefix is not None:
-            stray = self.prefix.resident_pages() - held
+            resident = self.prefix.resident_pages()
+            stray = resident - held - warm
             assert not stray, f"trie nodes outlive their pages: {stray}"
+            assert warm <= resident, (
+                f"warm pages outside the trie (retention exists only to "
+                f"keep prefix nodes attachable): {sorted(warm - resident)}"
+            )
+        else:
+            assert not warm, f"warm pages without a prefix index: {warm}"
 
     # -- KV page integrity (DESIGN.md §5.6) --------------------------------
 
@@ -1482,11 +1737,34 @@ class ServeEngine:
         )
         if not bad:
             return []
+        badset = set(bad)
         for p in bad:
+            if p not in self._page_fp:
+                continue   # already handled as part of a warm subtree
+            if self._warm_tier and self.allocator.is_warm(p):
+                # A corrupted WARM page has no sharers to heal — just
+                # drop it from circulation.  Its warm descendants (a warm
+                # page's children are never held) lose their ancestor
+                # chain, so the whole subtree leaves the trie; clean
+                # descendants reclaim to the free list while the bad
+                # page — and any corrupted descendant — quarantines.
+                sub = self.prefix.subtree_pages(p)
+                self.prefix.evict(sub)
+                for q in sub:
+                    self._page_fp.pop(q, None)
+                sub_bad = [q for q in sub if q in badset]
+                clean = [q for q in sub if q not in badset]
+                for q in sub_bad:
+                    self.stats["corrupted_pages"] += 1
+                    self.allocator.quarantine(q)
+                if clean:
+                    self.allocator.reclaim(clean)
+                    self.stats["warm_reclaimed"] += len(clean)
+                self.adaptive.note_reclaimed(sub)
+                continue
             self._page_fp.pop(p)
             self.stats["corrupted_pages"] += 1
             self.allocator.quarantine(p)
-        badset = set(bad)
         victims = [
             r for slot, r in self._live()
             if badset & set(self._slot_pages[slot])
@@ -1564,6 +1842,14 @@ class ServeEngine:
                 "next_id": self._next_id, "admit_seq": self._admit_seq,
             },
             "stats": dict(self.stats),
+            # Adaptive class knowledge survives restore (a counter-driven
+            # policy must not diverge after crash-recovery); warm pages
+            # themselves are volatile — restore starts with a cold warm
+            # tier and relearns residency, which is placement-only.
+            "adaptive": (
+                self.adaptive.snapshot_state()
+                if self.adaptive is not None else None
+            ),
             "requests": records,
             "allocator": alloc,
             "journal": {
@@ -1648,6 +1934,14 @@ class ServeEngine:
             self._slot_pages = [[] for _ in range(b)]
             if self.prefix is not None:
                 self.prefix = PrefixIndex(self.page_size)
+        if self.adaptive is not None:
+            self.adaptive = AdaptivePolicy(
+                warm_pages=self.adaptive.warm_pages,
+                replan_every=self.adaptive.replan_every,
+                page_size=self.adaptive.page_size,
+                spec_k=self.adaptive.spec_k,
+                pinned=self.adaptive.pinned,
+            )
         for k in self.stats:
             self.stats[k] = 0
 
@@ -1707,6 +2001,9 @@ class ServeEngine:
                 for k, v in payload["stats"].items():
                     if k in self.stats:
                         self.stats[k] = v
+                if (self.adaptive is not None
+                        and payload.get("adaptive")):
+                    self.adaptive.restore_state(payload["adaptive"])
                 alloc = payload.get("allocator")
                 if self.paged and alloc:
                     # Doomed pages' holders died with the crash: they are

@@ -31,9 +31,13 @@ Invariants (unit-tested in ``tests/test_prefix.py``):
 * **The trie holds no references.**  Residency is owned by the engine's
   refcounted ``PageAllocator`` (one reference per slot whose table maps
   the page).  When a page's refcount hits zero the allocator frees it and
-  the engine calls :meth:`evict`; because every sharer references the
-  whole chain, a parent page can never free before its children — nodes
-  evict leaf-upward (asserted).
+  the engine calls :meth:`evict` — unless the adaptive policy *retains*
+  it in the allocator's bounded warm tier (DESIGN.md §5.7), in which
+  case the node stays attachable: a later request with the same prefix
+  revives the page to refcount 1 without re-prefilling.  Because every
+  sharer references the whole chain, a parent page can never free before
+  its children — nodes evict leaf-upward (asserted) — and a warm node's
+  children are never held (a held child implies a held parent).
 """
 from __future__ import annotations
 
@@ -139,13 +143,48 @@ class PrefixIndex:
             del node.parent.children[node.key]
         return len(nodes)
 
+    def depth_of(self, page_id: int) -> int:
+        """1-based chain depth of a registered page (root child = 1), or
+        0 if the page is not registered.  The warm-retention policy
+        (DESIGN.md §5.7) retains shallowest-first so the warm set stays a
+        depth-prefix of its chain — a warm page's ancestors are either
+        held (some sharer still resident) or warm, never reclaimed out
+        from under it."""
+        node = self._by_page.get(page_id)
+        return node.depth if node is not None else 0
+
+    def parent_page(self, page_id: int) -> int | None:
+        """Physical page id of a registered page's parent node, or None
+        for a depth-1 page (root child) / an unregistered page."""
+        node = self._by_page.get(page_id)
+        if node is None or node.parent is None or node.parent.parent is None:
+            return None
+        return node.parent.page
+
+    def subtree_pages(self, page_id: int) -> list[int]:
+        """All registered page ids in the subtree rooted at ``page_id``
+        (inclusive), parents before children — or [] if unregistered.
+        Reclaiming/quarantining a warm page must close over its warm
+        descendants (evicting a node whose children are still resident
+        asserts); callers evict in REVERSE of this order (leaf-upward)."""
+        node = self._by_page.get(page_id)
+        if node is None:
+            return []
+        out, stack = [], [node]
+        while stack:
+            n = stack.pop()
+            out.append(n.page)
+            stack.extend(n.children.values())
+        return out
+
     def resident_tokens(self) -> int:
         """Total prompt tokens currently indexed (nodes x page_size)."""
         return len(self._by_page) * self.page_size
 
     def resident_pages(self) -> set[int]:
         """Physical page ids currently indexed.  The trie holds no
-        references, so every one of these MUST be held by the allocator —
-        the engine's ``check_invariants`` asserts exactly that (a trie
-        page outliving its last reference would alias freed storage)."""
+        references, so every one of these MUST be held OR warm in the
+        allocator — the engine's ``check_invariants`` asserts exactly
+        that (a trie page outliving its last reference without warm
+        retention would alias freed storage)."""
         return set(self._by_page)

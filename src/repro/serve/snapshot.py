@@ -46,14 +46,17 @@ from typing import Any, Iterator
 SNAPSHOT_MAGIC = "repro-serve-snapshot"
 SNAPSHOT_VERSION = 1
 
-# Knobs excluded from the config fingerprint: fault injection and the
-# strict-invariant sweep change no observable stream (that is their
-# acceptance gate), and recovery typically runs with the crash knobs OFF
-# that the crashed run had on.
+# Knobs excluded from the config fingerprint: fault injection, the
+# strict-invariant sweep, and the adaptive cache policy change no
+# observable stream (that is their acceptance gate — adaptation is
+# placement-only), and recovery typically runs with the crash knobs OFF
+# that the crashed run had on.  Excluding the adaptive knobs also lets
+# an adaptive engine restore a static engine's snapshot and vice versa.
 _FINGERPRINT_EXCLUDE = (
     "chaos_alloc_fail_p", "chaos_preempt_p", "chaos_seed",
     "chaos_share_fail_p", "chaos_corrupt_p", "chaos_crash_after_wave",
     "strict_invariants", "kv_integrity",
+    "adaptive", "warm_pages", "adaptive_replan_every",
 )
 
 

@@ -339,6 +339,192 @@ def test_alloc_negative_rejected():
         PageAllocator(4).alloc(-1)
 
 
+# ---------------------------------------------------------------------------
+# Warm retention tier: hypothesis state machine (DESIGN.md §5.7)
+# ---------------------------------------------------------------------------
+
+_WARM_BUDGET = 3
+
+
+class WarmTierAllocatorMachine(RuleBasedStateMachine):
+    """Random alloc/share/release/retain/revive/reclaim/quarantine
+    interleavings against pure-Python mirrors.  The adaptive warm tier
+    must compose with refcounting without weakening any §5.2/§5.4
+    guarantee:
+
+    * a warm page is never double-allocated — ``alloc`` can't see it
+      (it left the free list) and ``revive`` moves it to refcount 1
+      exactly once,
+    * the warm set never exceeds ``warm_budget`` (``retain`` refuses,
+      atomically, at the cap),
+    * ``reclaim`` restores refcount conservation: reclaimed pages are
+      ordinary free pages again and free + held + warm + quarantined
+      stays a partition of the pool throughout.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.alloc = PageAllocator(_POOL, warm_budget=_WARM_BUDGET)
+        self.mirror: dict[int, int] = {}     # page -> expected refcount
+        self.handles: list[list[int]] = []
+        self.warm: set[int] = set()
+        self.quarantined: set[int] = set()
+        self.doomed: set[int] = set()
+
+    @rule(n=st.integers(min_value=0, max_value=_POOL + 2))
+    def do_alloc(self, n):
+        before_free = self.alloc.free_count()
+        ids = self.alloc.alloc(n)
+        if n > before_free:
+            assert ids is None
+            assert self.alloc.free_count() == before_free
+        else:
+            assert len(ids) == n == len(set(ids))
+            for i in ids:
+                assert i not in self.mirror, "page handed out twice"
+                assert i not in self.warm, "warm page handed out by alloc"
+                self.mirror[i] = 1
+            self.handles.append(list(ids))
+
+    @rule(data=st.data())
+    def do_share(self, data):
+        if not self.handles:
+            return
+        ids = self.handles[
+            data.draw(st.integers(0, len(self.handles) - 1), label="handle")
+        ]
+        self.alloc.share(ids)
+        for i in ids:
+            self.mirror[i] += 1
+        self.handles.append(list(ids))
+
+    @rule(data=st.data())
+    def do_release(self, data):
+        if not self.handles:
+            return
+        ids = self.handles.pop(
+            data.draw(st.integers(0, len(self.handles) - 1), label="handle")
+        )
+        expect_freed = sorted(i for i in ids if self.mirror[i] == 1)
+        freed = self.alloc.release(ids)
+        assert sorted(freed) == expect_freed, "freed despite live refs"
+        for i in ids:
+            self.mirror[i] -= 1
+            if not self.mirror[i]:
+                del self.mirror[i]
+        for i in freed:
+            if i in self.doomed:
+                self.doomed.discard(i)
+                self.quarantined.add(i)
+
+    @rule(page=st.integers(min_value=0, max_value=_POOL - 1))
+    def do_retain(self, page):
+        free_before = sorted(self.alloc.free_pages)
+        expect = (len(self.warm) < _WARM_BUDGET
+                  and self.alloc.is_free(page))
+        assert self.alloc.retain(page) is expect
+        if expect:
+            self.warm.add(page)
+        else:
+            # Refusal is atomic: a full budget / non-free page moves
+            # nothing.
+            assert sorted(self.alloc.free_pages) == free_before
+
+    @rule(data=st.data())
+    def do_reclaim(self, data):
+        if not self.warm:
+            return
+        ids = data.draw(
+            st.lists(st.sampled_from(sorted(self.warm)), unique=True),
+            label="reclaim",
+        )
+        assert sorted(self.alloc.reclaim(ids)) == sorted(ids)
+        self.warm -= set(ids)
+
+    @rule(data=st.data())
+    def do_revive(self, data):
+        if not self.warm:
+            return
+        ids = data.draw(
+            st.lists(st.sampled_from(sorted(self.warm)), unique=True),
+            label="revive",
+        )
+        assert self.alloc.revive(ids) is True
+        for i in ids:
+            assert i not in self.mirror, "revived page was already held"
+            self.mirror[i] = 1
+        self.warm -= set(ids)
+        if ids:
+            self.handles.append(list(ids))
+
+    @rule(page=st.integers(min_value=0, max_value=_POOL - 1))
+    def do_quarantine(self, page):
+        expect = page not in self.quarantined and page not in self.doomed
+        assert self.alloc.quarantine(page) is expect
+        if not expect:
+            return
+        if page in self.mirror:
+            self.doomed.add(page)
+        else:
+            # Free AND warm pages leave service immediately.
+            self.warm.discard(page)
+            self.quarantined.add(page)
+
+    @invariant()
+    def warm_tier_conserved(self):
+        held = self.alloc.held_pages
+        free = self.alloc.free_pages
+        warm = self.alloc.warm_pages
+        assert held == set(self.mirror)
+        for i, refs in self.mirror.items():
+            assert self.alloc.ref_count(i) == refs
+        assert warm == self.warm
+        assert len(warm) <= _WARM_BUDGET, "warm budget exceeded"
+        assert not warm & held, "page simultaneously warm and held"
+        assert not warm & set(free), "page simultaneously warm and free"
+        assert not warm & self.quarantined
+        assert self.alloc.quarantined_pages == self.quarantined
+        assert self.alloc.doomed_pages == self.doomed
+        assert sorted(list(free) + list(held) + sorted(warm)
+                      + sorted(self.quarantined)) == list(range(_POOL)), (
+            "free + held + warm + quarantined is not a partition of the pool"
+        )
+
+
+WarmTierAllocatorMachine.TestCase.settings = settings(
+    max_examples=60, stateful_step_count=50, deadline=None
+)
+TestWarmTierAllocator = WarmTierAllocatorMachine.TestCase
+
+
+def test_warm_retain_refuses_at_budget_and_non_free():
+    """retain() is atomic: it refuses pages that aren't free (held,
+    quarantined, already warm) and refuses everything past the budget;
+    reclaim/revive assert on non-warm ids rather than guessing."""
+    alloc = PageAllocator(6, warm_budget=2)
+    ids = alloc.alloc(2)
+    assert not alloc.retain(ids[0])            # held, not free
+    alloc.free(ids)
+    assert alloc.retain(ids[0])
+    assert not alloc.retain(ids[0])            # already warm, not free
+    assert alloc.retain(ids[1])
+    spare = alloc.alloc(1)
+    alloc.free(spare)
+    assert not alloc.retain(spare[0])          # budget full
+    assert alloc.warm_count() == 2
+    with pytest.raises(AssertionError, match="not warm"):
+        alloc.reclaim(spare)
+    with pytest.raises(AssertionError, match="not warm"):
+        alloc.revive(spare)
+    with pytest.raises(ValueError):
+        alloc.retain(99)
+    # Revive hands the pages back at refcount 1; the pool stays whole.
+    assert alloc.revive(ids)
+    assert all(alloc.ref_count(i) == 1 for i in ids)
+    alloc.free(ids)
+    assert sorted(alloc.free_pages) == list(range(6))
+
+
 def test_quarantine_lifecycle():
     """Quarantine semantics (DESIGN.md §5.6): free pages leave service
     immediately, held pages are doomed and divert at their LAST release

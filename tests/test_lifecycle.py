@@ -337,8 +337,9 @@ def test_policy_report_schema_stable():
     assert set(report) == {
         "kv_bytes_per_layer", "kv_residency", "cache_layout", "sampling",
         "plan_cache", "speculative", "paged_kv", "prefix_sharing",
-        "lifecycle", "integrity", "decode_attention",
+        "adaptive", "lifecycle", "integrity", "decode_attention",
     }
+    assert report["adaptive"] == {"enabled": False}   # static engine
     assert set(report["lifecycle"]) == {
         "preemption_enabled", "max_queue", "preempted", "preempted_forced",
         "recompute_tokens", "cancelled", "expired", "rejected",

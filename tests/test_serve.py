@@ -920,3 +920,171 @@ def test_default_seed_reproducible():
         return r.generated
 
     assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive cache policy (DESIGN.md §5.7): the counter-driven controller
+# may move PAGES (warm retention, cost-aware victims, per-class
+# replanning) but never TOKENS — every cell of the matrix must be
+# bit-identical to the static engine, including under chaos.
+# ---------------------------------------------------------------------------
+
+
+def _adaptive(cfg, warm=3, every=2):
+    return dataclasses.replace(cfg, adaptive=True, warm_pages=warm,
+                               adaptive_replan_every=every)
+
+
+def _assert_warm_conserved(eng):
+    """Zero leaks with the warm tier live: free + warm + quarantined is
+    the whole pool once nothing is resident."""
+    free = sorted(eng.allocator.free_pages)
+    warm = sorted(eng.allocator.warm_pages)
+    quar = sorted(eng.allocator.quarantined_pages)
+    assert sorted(free + warm + quar) == list(range(eng.n_pages)), (
+        free, warm, quar
+    )
+    eng.check_invariants()
+
+
+@pytest.mark.parametrize("sharing", [False, True])
+@pytest.mark.parametrize("arch", PREFIX_ARCHS)
+def test_adaptive_bit_identity_matrix(arch, sharing):
+    """Adaptive on vs off across {qwen, zamba2, whisper} x {sharing
+    on, off}, plus a chaos leg per cell (seeded alloc refusals + forced
+    preemptions).  Warm retention genuinely engages only for qwen +
+    paged + sharing (the only cell with a prefix index); every other
+    cell pins the graceful no-op.  Two slots over four requests force
+    continuous re-admission, so retention decisions happen mid-run, not
+    just at drain."""
+    cfg = dataclasses.replace(_paged(get_config(arch, smoke=True)),
+                              prefix_sharing=sharing)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    extras = _spec_extras(cfg, 2)
+
+    def run(c):
+        reqs = _prefix_requests(cfg)
+        eng = ServeEngine(c, params, batch_slots=2, max_len=32,
+                          chunk_size=4, extras=extras)
+        eng.run(reqs)
+        return eng, [list(r.generated) for r in reqs]
+
+    _, ref = run(cfg)
+    eng, got = run(_adaptive(cfg, every=1))
+    assert got == ref, f"{arch}/sharing={sharing}: adaptation moved tokens"
+    if sharing and eng.prefix_sharing:
+        assert eng.stats["warm_retained"] >= 1, "warm tier never engaged"
+        assert eng.stats["warm_hits"] >= 1, "no re-arrival ever revived"
+        assert eng.stats["replans"] >= 1
+        # Pin the adaptive report schema — adaptive_rows parses it.
+        rep = eng.policy_report()["adaptive"]
+        assert set(rep) == {
+            "enabled", "warm_tier", "warm_pages_now", "warm_retained",
+            "warm_reclaimed", "warm_hits", "warm_tokens_saved", "replans",
+            "wave", "classes", "combos", "warm_budget",
+        }
+        assert rep["enabled"] and rep["warm_tier"]
+    else:
+        assert eng.stats["warm_retained"] == 0
+    _assert_warm_conserved(eng)
+
+    chaos = dataclasses.replace(
+        _adaptive(cfg, every=1), chaos_alloc_fail_p=0.3,
+        chaos_preempt_p=0.3, chaos_seed=3,
+    )
+    eng_c, got_c = run(chaos)
+    assert got_c == ref, f"{arch}/sharing={sharing}: chaos+adaptive diverged"
+    _assert_warm_conserved(eng_c)
+
+
+def test_adaptive_cost_aware_preemption_identity():
+    """Cost-aware victim selection under genuine page pressure: the
+    adaptive engine may evict a DIFFERENT resident than youngest-first,
+    but recompute-restore keeps every stream bit-identical, the
+    anti-livelock bound holds, and warm reclaim (capacity beats
+    retention) keeps admission unblocked in an undersized pool."""
+    cfg = dataclasses.replace(
+        _paged(get_config("qwen2.5-32b", smoke=True)), prefix_sharing=True
+    )
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    spec = [(6, 6), (10, 8), (5, 8)]
+
+    def run(c, **kw):
+        rng = np.random.default_rng(3)
+        reqs = [Request(
+            prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+            max_new_tokens=m, seed=11) for n, m in spec]
+        eng = ServeEngine(c, params, batch_slots=2, max_len=32,
+                          chunk_size=2, **kw)
+        eng.run(reqs)
+        return eng, [list(r.generated) for r in reqs]
+
+    _, ref = run(cfg)                              # roomy pool: no eviction
+    eng, got = run(_adaptive(cfg, warm=2, every=1), n_pages=4)
+    assert eng.stats["preempted"] >= 1, "scenario failed to force eviction"
+    assert got == ref, "cost-aware victim choice changed a stream"
+    assert all(r.preempted_n <= 1
+               for r in eng._by_id.values()), "anti-livelock bound broken"
+    _assert_warm_conserved(eng)
+
+
+def test_prefix_hit_rate_not_diluted_by_restores():
+    """Regression (stats bugfix): prefix_hit_rate used to divide
+    prefix_hits by prefill_tokens, which also counts preemption-restore
+    recompute prefills — forced preemptions deflated the rate.  The rate
+    is now hits-over-FRESH-admissions; restores accrue to `readmitted`
+    and leave it untouched."""
+    cfg = dataclasses.replace(
+        _paged(get_config("qwen2.5-32b", smoke=True)), prefix_sharing=True,
+        chaos_preempt_p=0.5, chaos_seed=123,
+    )
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    reqs = _prefix_requests(cfg)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, chunk_size=4)
+    eng.run(reqs)
+    s = eng.serve_stats()
+    assert eng.stats["preempted_forced"] >= 1, "chaos never fired"
+    assert s["readmitted"] >= 1
+    assert s["admitted_fresh"] == len(reqs)
+    assert s["prefix_hits_fresh"] >= 1
+    assert s["prefix_hit_rate"] == (
+        s["prefix_hits_fresh"] / s["admitted_fresh"]
+    )
+    # The old denominator counted every prefill (fresh + restore), so it
+    # strictly exceeds fresh admissions here — the buggy formula would
+    # report a strictly lower rate.
+    assert s["prefill_tokens"] > s["admitted_fresh"]
+    assert s["prefix_hit_rate"] > s["prefix_hits"] / s["prefill_tokens"]
+
+
+def test_spec_tokens_per_round_counts_only_spec_tokens():
+    """Regression (stats bugfix): spec_tokens_per_round used to divide
+    ALL decode_tokens by spec_rounds, so plain-chunk tokens (non-spec
+    phases sharing a stats dict, e.g. merged bench legs) inflated the
+    metric.  Spec-round-emitted tokens now land in their own counter."""
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-32b", smoke=True), spec_k=2, spec_ngram=2,
+    )
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    extras = _spec_extras(cfg, 2)
+    rng = np.random.default_rng(5)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+                    max_new_tokens=6, seed=1) for _ in range(2)]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32,
+                      chunk_size=2, extras=extras)
+    eng.run(reqs)
+    s0 = eng.serve_stats()
+    assert s0["spec_rounds"] >= 1
+    assert s0["spec_tokens"] == s0["decode_tokens"]   # pure-spec run
+    assert s0["spec_tokens_per_round"] == (
+        s0["spec_tokens"] / s0["spec_rounds"]
+    )
+    # Simulate the mixed case the old formula got wrong: plain decode
+    # tokens landing in the same stats dict (spec disabled mid-run /
+    # merged bench legs) must NOT move the per-round figure.
+    eng.stats["decode_tokens"] += 100
+    s1 = eng.serve_stats()
+    assert s1["spec_tokens_per_round"] == s0["spec_tokens_per_round"]
+    assert s1["spec_tokens_per_round"] < (
+        s1["decode_tokens"] / s1["spec_rounds"]
+    )

@@ -325,3 +325,84 @@ def test_drain_watchdog_raises_no_progress(params):
     assert "no progress" in msg and "usable_pages" in msg
     # The engine is still inspectable after the typed failure.
     assert eng.allocator.usable_pages() == 0
+
+
+def test_counters_and_adaptive_state_survive_restore(params, tmp_path):
+    """Satellite (stats/snapshot bugfix): a restored engine must carry
+    the crashed engine's policy-relevant counters AND the adaptive
+    controller's learned class state forward — any counter-driven
+    decision would otherwise diverge after crash-recovery.  Warm pages
+    themselves are volatile (device KV died with the process); only
+    knowledge survives.  The recovered run still finishes bit-identical
+    to the uninterrupted one."""
+    cfg = _cfg(prefix_sharing=True, adaptive=True, warm_pages=2,
+               adaptive_replan_every=1)
+    ref_out = _reference(cfg, params, seed=5)
+
+    got = _reqs(cfg, seed=5)
+    e1 = _engine(cfg, params)
+    e1.submit(got)
+    for _ in range(3):                          # mid-stream snapshot point
+        e1.step()
+    pre = dict(e1.stats)
+    pre_adaptive = e1.adaptive.snapshot_state()
+    assert pre["admission_waves"] >= 1
+    spath = str(tmp_path / "adaptive.json")
+    info = e1.snapshot(spath)
+    assert info["in_flight"] >= 1
+
+    e2 = _engine(cfg, params)
+    e2.restore(spath)
+    # Counter continuity: every policy-relevant counter resumes where
+    # the snapshot left it, nothing restarts from zero.
+    for key in ("admission_waves", "prefill_tokens", "decode_tokens",
+                "admitted_fresh", "readmitted", "prefill_work_tokens",
+                "prefix_hits", "prefix_hits_fresh", "warm_retained",
+                "warm_hits", "warm_reclaimed", "replans", "preempted"):
+        assert e2.stats[key] == pre[key], (
+            f"counter {key!r} did not survive restore"
+        )
+    # Learned adaptive state (classes, combos, wave clock) round-trips;
+    # page-level recency starts cold by design.
+    assert e2.adaptive.snapshot_state() == pre_adaptive
+    assert e2.adaptive.wave == e1.adaptive.wave
+    assert e2.allocator.warm_count() == 0, "warm pages must not survive"
+
+    e2.drain()
+    assert e2.results() == ref_out
+    free = sorted(e2.allocator.free_pages)
+    warm = sorted(e2.allocator.warm_pages)
+    assert sorted(free + warm) == list(range(e2.n_pages))
+    e2.check_invariants()
+
+
+def test_adaptive_crash_recovery_identity(params, tmp_path):
+    """Injected kill mid-run with the adaptive tier live: journal replay
+    into a fresh adaptive engine reproduces the uninterrupted streams,
+    and a static engine can restore the adaptive engine's snapshot (the
+    adaptive knobs are fingerprint-exempt — placement-only)."""
+    acfg = _cfg(prefix_sharing=True, adaptive=True, warm_pages=2,
+                adaptive_replan_every=1)
+    ref_out = _reference(acfg, params, seed=7)
+
+    jpath = str(tmp_path / "aj.jsonl")
+    crash = dataclasses.replace(acfg, chaos_crash_after_wave=1)
+    e1 = _engine(crash, params, journal_path=jpath)
+    e1.submit(_reqs(acfg, seed=7))
+    with pytest.raises(ChaosCrash):
+        e1.drain()
+
+    e2 = _engine(acfg, params, journal_path=jpath)
+    e2.restore()                                 # journal-only recovery
+    e2.drain()
+    assert e2.results() == ref_out
+
+    # Cross-restore: static engine <- adaptive snapshot (and the stream
+    # identity gate still holds — adaptation never moved a token).
+    spath = str(tmp_path / "cross.json")
+    e2.snapshot(spath)
+    e3 = _engine(_cfg(prefix_sharing=True), params)
+    e3.restore(spath)
+    assert e3.adaptive is None
+    assert e3.results() == ref_out
+    e3.check_invariants()
