@@ -29,6 +29,13 @@ figure-specific metrics.
 * ``serve_chaos`` — lifecycle robustness: forced preemptions under an
   undersized pool and a seeded fault-injected run, both asserted
   bit-identical to the fault-free run with zero leaked pages
+* ``serve_decode_kernel`` — paged decode-attention kernel vs the gather
+  path, asserted bit-identical across {qwen, zamba2} x {prefix sharing
+  on/off} x {chaos off/on} with zero leaked pages
+* ``serve_decode_context`` — tok/s vs resident-context length (xla vs
+  paged kernel) with the v5e roofline-modeled advantage asserted to
+  grow with context; ``kern_decode/*`` rows add the kernel-level
+  ablation (xla vs gather+kernel vs paged)
 * ``lint`` — the ``repro.lint`` static-analysis pass over src/,
   benchmarks/ and examples/ against the committed baseline:
   ``rules_run``, ``findings``, ``baseline_suppressed``, ``wall_s``
@@ -166,12 +173,24 @@ def main(argv=None) -> None:
                 reps=max(1, args.reps)
             )
             _emit(adaptive_rows, rows)
+            # Paged decode-attention kernel: paged-vs-gather bit-identity
+            # across families x sharing x chaos, plus tok/s vs resident
+            # context with the modeled advantage asserted to grow.
+            dk_rows, dk_summary = serve_bench.decode_kernel_rows()
+            _emit(dk_rows, rows)
+            ctx_rows, ctx_summary = serve_bench.decode_context_rows()
+            _emit(ctx_rows, rows)
             serve_summary = {**serve_summary, **paged_summary,
                              **family_summary, **spec_summary,
                              **prefix_summary, **chaos_summary,
-                             **recovery_summary, **adaptive_summary}
+                             **recovery_summary, **adaptive_summary,
+                             **dk_summary, **ctx_summary}
         _emit(figures.wall_time_small(), rows)
         _emit(kernel_bench.xla_wall_times(), rows)
+        # Decode-attention kernel ablation: xla vs gather+kernel vs paged
+        # across resident-context lengths; asserts paged-vs-gather
+        # bit-identity per shape and growing modeled advantage.
+        _emit(kernel_bench.decode_attention_ablation(), rows)
 
     # -- static-analysis pass (perf/determinism invariants) ------------------
     import os

@@ -60,15 +60,31 @@ Emitted metrics (also merged into ``benchmarks.run --json`` output):
                              stance on prefill work and the warm
                              re-arrival TTFT cut >= 1.2x over static
                              refcount-zero freeing
+* ``serve_decode_kernel``  — paged decode-attention kernel identity
+                             matrix (``decode_kernel_rows``):
+                             ``pallas_paged`` (page table dereferenced
+                             inside the kernel) vs ``pallas_gather``
+                             (gather + dense split-KV kernel, the
+                             reference semantics) asserted bit-identical
+                             across {qwen, zamba2} x {prefix sharing
+                             on/off} x {chaos off/on}, zero leaked pages
+* ``serve_decode_context`` — tok/s vs resident-context length
+                             (``decode_context_rows``): xla vs paged
+                             kernel wall throughput plus the v5e
+                             roofline-modeled advantage, asserted to
+                             GROW with context (the gather copy is the
+                             cost the paged kernel deletes)
 
 ``python -m benchmarks.serve_bench --identity-only`` runs only the
 bit-identity checks (the CI gate) — paged vs contiguous, speculative vs
 plain (greedy + seeded sampling) with the acceptance-rate floor,
 shared-prefix vs unshared with the >= 2x effective-capacity floor, the
 chaos leg (preemption + injected faults must not change a single token
-and must leak zero pages), and the adaptive leg (static/pinned/adaptive
-engines bit-identical, adaptive <= best static on prefill work) — and
-exits nonzero on any violation.
+and must leak zero pages), the adaptive leg (static/pinned/adaptive
+engines bit-identical, adaptive <= best static on prefill work), and the
+decode-kernel legs (paged kernel bit-identical to the gather path across
+families x sharing x chaos; modeled paged advantage grows with resident
+context) — and exits nonzero on any violation.
 """
 from __future__ import annotations
 
@@ -1250,6 +1266,221 @@ def adaptive_rows(reps: int = 3, identity_only: bool = False):
     return [row], summary
 
 
+# ---------------------------------------------------------------------------
+# Decode-kernel legs: paged-vs-gather identity matrix + context scaling
+# ---------------------------------------------------------------------------
+
+DK_ARCHS = ("qwen2.5-32b", "zamba2-2.7b")
+DK_SYS = 2 * FAMILY_PAGE        # 16-token shared system prompt = 2 pages
+# Demands run to 4 pages/request at page 8; 2 slots -> up to 8 concurrent
+# pages against a 6-page pool, so the matrix exercises real eviction under
+# both kernels (the schedules must still match token-for-token).
+DK_POOL = 6
+DK_SPEC = ((3, 6), (6, 8), (4, 6), (5, 7))
+
+# Context-scaling leg: resident context per slot at the decode steps we
+# time.  max_len covers the largest context; the pool is ample (scaling,
+# not pressure, is the subject here).
+DK_CONTEXTS = (16, 32, 64)
+DK_CTX_PAGE = 16
+DK_CTX_MAX_LEN = 80
+DK_CTX_NEW = 4
+
+
+def _dk_requests(cfg, seed=5):
+    """Shared system prompt + per-request tails, so the sharing=on cell of
+    the matrix actually attaches shared pages under the paged kernel."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab, size=DK_SYS).astype(np.int32)
+    return [
+        Request(prompt=np.concatenate(
+                    [sys_p, rng.integers(0, cfg.vocab, size=n).astype(np.int32)]),
+                max_new_tokens=m)
+        for n, m in DK_SPEC
+    ]
+
+
+def decode_kernel_rows(identity_only: bool = False):
+    """Paged-kernel identity gate: ``pallas_paged`` (the kernel
+    dereferencing the page table in place) must reproduce
+    ``pallas_gather`` (gather_pages + the dense split-KV kernel — the
+    reference semantics for the clamp-to-page-0-then-mask contract)
+    bit-for-bit across {qwen dense-GQA, zamba2 hybrid} x {prefix sharing
+    on/off} x {chaos off/on}, with zero leaked pages on both engines.
+
+    zamba2 silently disables prefix sharing (hybrid SSM state can't
+    share); that cell still runs — the gate is that the kernels agree
+    under whatever the engine actually does."""
+    rows = []
+    summary = {}
+    for arch in DK_ARCHS:
+        base = dataclasses.replace(
+            get_config(arch, smoke=True),
+            cache_layout="paged", kv_page_size=FAMILY_PAGE,
+        )
+        params = build_model(base).init(jax.random.PRNGKey(0))
+        for sharing in (False, True):
+            for chaos in (False, True):
+                cfg = dataclasses.replace(base, prefix_sharing=sharing)
+                if chaos:
+                    cfg = dataclasses.replace(
+                        cfg, chaos_alloc_fail_p=CHAOS_ALLOC_FAIL_P,
+                        chaos_preempt_p=CHAOS_PREEMPT_P,
+                        chaos_seed=CHAOS_SEED,
+                    )
+
+                def run(kernel, c=cfg):
+                    eng = ServeEngine(
+                        dataclasses.replace(c, decode_kernel=kernel),
+                        params, batch_slots=FAMILY_SLOTS,
+                        max_len=FAMILY_MAX_LEN, chunk_size=4,
+                        n_pages=DK_POOL,
+                    )
+                    reqs = _dk_requests(c)
+                    eng.run(reqs)
+                    leaked = eng.n_pages - len(eng.free_pages)
+                    assert leaked == 0, (
+                        f"{kernel} leaked {leaked} page(s) on {arch} "
+                        f"sharing={sharing} chaos={chaos}"
+                    )
+                    eng.check_invariants()
+                    return eng, reqs
+
+                geng, gref = run("pallas_gather")
+                peng, pref = run("pallas_paged")
+                bad = [i for i, (a, b) in enumerate(zip(gref, pref))
+                       if a.generated != b.generated]
+                assert not bad, (
+                    f"decode-kernel bit-identity violated on {arch} "
+                    f"sharing={sharing} chaos={chaos}: paged != gather "
+                    f"on request(s) {bad}"
+                )
+                if chaos:
+                    life = peng.policy_report()["lifecycle"]
+                    fired = (life["chaos"]["injected_alloc_failures"]
+                             + peng.stats["preempted_forced"])
+                    assert fired >= 1, (
+                        f"chaos never fired on {arch} sharing={sharing}"
+                    )
+                report = peng.policy_report()["decode_attention"]
+                tag = f"{arch}/share{int(sharing)}/chaos{int(chaos)}"
+                row = {
+                    "name": f"serve/decode_kernel_{tag}",
+                    "bit_identical": True,
+                    "leaked_pages": 0,
+                    "planned_splits": report["planned_splits"],
+                    "kernel_bkv": report["kernel_bkv"],
+                    "prefix_hits": peng.stats["prefix_hits"],
+                    "preempted": peng.stats["preempted"],
+                }
+                if chaos:
+                    row["injected_alloc_failures"] = (
+                        life["chaos"]["injected_alloc_failures"])
+                    row["preempted_forced"] = peng.stats["preempted_forced"]
+                rows.append(row)
+                summary[tag] = {k: v for k, v in row.items()
+                                if k != "name"}
+        if identity_only:
+            print(f"decode_kernel {arch}: bit-identical "
+                  "(paged == gather) across sharing x chaos")
+    return rows, {"serve_decode_kernel": summary}
+
+
+def _ctx_requests(cfg, context, seed=9):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab,
+                                    size=context - DK_CTX_NEW).astype(np.int32),
+                max_new_tokens=DK_CTX_NEW)
+        for _ in range(FAMILY_SLOTS)
+    ]
+
+
+def decode_context_rows(identity_only: bool = False):
+    """Throughput vs resident-context length, xla vs the paged kernel.
+
+    CPU wall clocks (kernels in interpret mode) anchor relative cost
+    only; the acceptance gate is the v5e HBM roofline story: the xla
+    path streams the resident KV three times per decode step (read pool,
+    write the gathered dense copy, read it back in ``_sdpa``) where the
+    paged kernel reads each mapped page exactly once, so the modeled
+    advantage must GROW with resident context — asserted, alongside
+    paged-vs-gather bit-identity at every context length."""
+    from repro import hw
+
+    base = dataclasses.replace(
+        get_config(SERVE_ARCH, smoke=True),
+        cache_layout="paged", kv_page_size=DK_CTX_PAGE,
+    )
+    params = build_model(base).init(jax.random.PRNGKey(0))
+    pool = FAMILY_SLOTS * (DK_CTX_MAX_LEN // DK_CTX_PAGE)
+    rows, advantages = [], []
+    for t in DK_CONTEXTS:
+
+        def run(kernel, timed):
+            eng = ServeEngine(
+                dataclasses.replace(base, decode_kernel=kernel),
+                params, batch_slots=FAMILY_SLOTS, max_len=DK_CTX_MAX_LEN,
+                chunk_size=16, n_pages=pool,
+            )
+            reqs = _ctx_requests(base, t)
+            tok_s = None
+            if timed:
+                eng.run(_ctx_requests(base, t))     # warm/compile
+                tok_s = _timed_run(eng, reqs)
+            else:
+                eng.run(reqs)
+            return eng, reqs, tok_s
+
+        _, gref, _ = run("pallas_gather", timed=False)
+        peng, pref, paged_tok_s = run("pallas_paged", timed=not identity_only)
+        bad = [i for i, (a, b) in enumerate(zip(gref, pref))
+               if a.generated != b.generated]
+        assert not bad, (
+            f"decode-kernel bit-identity violated at context {t}: "
+            f"paged != gather on request(s) {bad}"
+        )
+
+        # v5e roofline per decode step per slot: the KV stream is
+        # 2*t*hkv*dh*4 bytes (K and V, fp32); xla pays it 3x (pool read,
+        # dense write, _sdpa read), paged pays it once.  q/out bytes are
+        # shared by both paths.
+        kv_bytes = 2 * t * base.n_kv_heads * base.head_dim * 4
+        fixed = 2 * base.n_heads * base.head_dim * 4
+        xla_us = hw.hbm_time(3 * kv_bytes + fixed) * 1e6
+        paged_us = hw.hbm_time(kv_bytes + fixed) * 1e6
+        advantage = xla_us / paged_us
+        advantages.append(advantage)
+        row = {
+            "name": f"serve/decode_context_t{t}",
+            "resident_context": t,
+            "modeled_xla_us": xla_us,
+            "modeled_paged_us": paged_us,
+            "modeled_advantage": advantage,
+            "planned_splits":
+                peng.policy_report()["decode_attention"]["planned_splits"],
+            "bit_identical": True,
+        }
+        if not identity_only:
+            _, _, xla_tok_s = run("xla", timed=True)
+            row.update({
+                "paged_tok_s": paged_tok_s,
+                "xla_tok_s": xla_tok_s,
+                "paged_over_xla_wall": paged_tok_s / xla_tok_s,
+            })
+        rows.append(row)
+    assert all(a2 > a1 for a1, a2 in zip(advantages, advantages[1:])), (
+        f"paged advantage must grow with resident context: {advantages}"
+    )
+    if identity_only:
+        print("decode_context: bit-identical (paged == gather) at contexts "
+              f"{DK_CONTEXTS}; modeled advantage grows "
+              f"{advantages[0]:.2f}x -> {advantages[-1]:.2f}x")
+    summary = {f"t{t}": {k: v for k, v in r.items() if k != "name"}
+               for t, r in zip(DK_CONTEXTS, rows)}
+    return rows, {"serve_decode_context": summary}
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -1262,11 +1493,14 @@ if __name__ == "__main__":
                          "shared-prefix vs unshared with the effective-"
                          "capacity floor, and the chaos leg (preemption + "
                          "seeded fault injection must not change a token "
-                         "and must leak zero pages), and the crash-"
+                         "and must leak zero pages), the crash-"
                          "recovery leg (every family crashes mid-flight "
                          "and restores bit-identically from snapshot + "
-                         "journal) (CI gate); nonzero exit on any "
-                         "violation")
+                         "journal), and the decode-kernel legs (paged "
+                         "kernel bit-identical to the gather path "
+                         "across families x sharing x chaos, modeled "
+                         "advantage grows with context) (CI gate); "
+                         "nonzero exit on any violation")
     ap.add_argument("--recovery-report", metavar="PATH", default=None,
                     help="write the crash-recovery rows (per-family "
                          "crash/restore + corruption-healing results) as "
@@ -1280,6 +1514,8 @@ if __name__ == "__main__":
         chaos_rows(identity_only=True)
         recovery_rows(identity_only=True, report_path=args.recovery_report)
         adaptive_rows(identity_only=True)
+        decode_kernel_rows(identity_only=True)
+        decode_context_rows(identity_only=True)
         print("serve bit-identity: PASS")
     else:
         rows, summary = serve_rows()
@@ -1290,10 +1526,13 @@ if __name__ == "__main__":
         crows, csummary = chaos_rows()
         rrows, rsummary = recovery_rows(report_path=args.recovery_report)
         arows, asummary = adaptive_rows()
-        for r in rows + prows + frows + srows + xrows + crows + rrows + arows:
+        krows, ksummary = decode_kernel_rows()
+        trows, tsummary = decode_context_rows()
+        for r in (rows + prows + frows + srows + xrows + crows + rrows
+                  + arows + krows + trows):
             print(r)
         print(json.dumps(
             {**summary, **psummary, **fsummary, **ssummary, **xsummary,
-             **csummary, **rsummary, **asummary},
+             **csummary, **rsummary, **asummary, **ksummary, **tsummary},
             indent=1,
         ))

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF, cdiv
+from repro.kernels.common import NEG_INF, cdiv, interpret_default
 
 
 def _decode_kernel(
@@ -82,13 +82,14 @@ def decode_attention(
     scale: float | None = None,
     bkv: int = 512,
     splits: int = 1,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     b, hq, d = q.shape
     _, hkv, s, _ = k.shape
     assert hq % hkv == 0
     group = hq // hkv
     scale = float(scale if scale is not None else d ** -0.5)
+    interpret = interpret_default() if interpret is None else interpret
     if lengths is None:
         lengths = jnp.full((b,), s, jnp.int32)
 
@@ -155,3 +156,161 @@ def combine_partials(
     l_glob = jnp.sum(l * w, axis=-1)
     num = jnp.sum(acc * w[..., None], axis=2)
     return num / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: dereference the page table inside the kernel.
+#
+# The paged engine's KV lives in a (N, page_size, hkv, d) pool addressed
+# through per-slot page tables (models/common.py, DESIGN.md §5.2).  The
+# dense path pays ``gather_pages`` — an XLA copy of the whole resident
+# context — before every decode step.  Here the gather disappears: the page
+# table rides in as a scalar-prefetch operand, the K/V BlockSpec index maps
+# dereference it per grid step, and the pool is read in place, one page per
+# block.  Everything downstream (online-softmax accumulator, partials,
+# combine_partials merge) is shared with the dense kernel, block for block,
+# so with bkv == page_size and equal ``splits`` the two paths are
+# bit-identical — the CI identity gate relies on exactly that.
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(
+    pages_ref, len_ref,            # scalar-prefetch: (b, P) table, (b,) lens
+    q_ref, k_ref, v_ref,
+    acc_out, m_out, l_out,
+    acc_ref, m_ref, l_ref,
+    *,
+    psz: int,
+    page_steps: int,
+    scale: float,
+):
+    ib = pl.program_id(0)
+    s_idx = pl.program_id(2)   # split index
+    ik = pl.program_id(3)      # page within split
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Same mask as the dense kernel over the gathered view: logical page
+    # lp covers positions [lp*psz, (lp+1)*psz), valid below the slot's
+    # cursor.  Unmapped (-1) and grid-overrun pages were clamped by the
+    # index map; every lane they contribute sits at pos >= valid_len, so
+    # the mask zeroes them exactly (p == 0.0, alpha == 1.0) — the paged
+    # twin of gather_pages' clamp-to-page-0-then-mask contract.
+    valid_len = len_ref[ib]
+    base = (s_idx * page_steps + ik) * psz
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, psz), 1)[0]
+    mask = pos < valid_len
+
+    q = q_ref[0].astype(jnp.float32)                    # (group, d)
+    k = k_ref[...].astype(jnp.float32)[0, :, 0]         # (psz, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask[None, :], jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    v = v_ref[...].astype(jnp.float32)[0, :, 0]         # (psz, d)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ik == page_steps - 1)
+    def _flush():
+        acc_out[0, :, 0, :] = acc_ref[...]
+        m_out[0, :, 0] = m_ref[...]
+        l_out[0, :, 0] = l_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "splits", "interpret")
+)
+def paged_decode_attention(
+    q: jnp.ndarray,          # (b, hq, d)
+    k_pool: jnp.ndarray,     # (N, page_size, hkv, d) physical page pool
+    v_pool: jnp.ndarray,     # (N, page_size, hkv, d)
+    pages: jnp.ndarray,      # (b, P) int32 page table, -1 = unmapped
+    lengths: jnp.ndarray | None = None,   # (b,) valid lengths, <= P*psz
+    *,
+    scale: float | None = None,
+    splits: int = 1,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    N, psz, hkv, _ = k_pool.shape
+    P = pages.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    interpret = interpret_default() if interpret is None else interpret
+    if lengths is None:
+        lengths = jnp.full((b,), P * psz, jnp.int32)
+
+    # One KV block per page: the page table is the block index map, so the
+    # split-K decomposition is over logical pages.  Grid overrun past P
+    # (when splits does not divide P) is clamped in the map and masked in
+    # the kernel — an exact no-op, same as the dense kernel's zero padding.
+    splits = max(1, min(int(splits), P))
+    page_steps = cdiv(P, splits)
+    grid = (b, hkv, splits, page_steps)
+
+    # Index maps get the grid indices plus the scalar-prefetch refs; the
+    # K/V maps dereference the table (clamping unmapped entries to page 0,
+    # mirroring gather_pages) so only the referenced page is ever pulled
+    # from HBM — no dense per-slot copy exists anywhere.
+    kv_spec = pl.BlockSpec(
+        (1, psz, 1, d),
+        lambda ib, ih, sp, ik, pt, ln, ps=page_steps, Pn=P, Nn=N: (
+            jnp.clip(pt[ib, jnp.minimum(sp * ps + ik, Pn - 1)], 0, Nn - 1),
+            0, ih, 0,
+        ),
+    )
+    acc, m, l = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel, psz=psz, page_steps=page_steps, scale=scale
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, group, d),
+                    lambda ib, ih, sp, ik, pt, ln: (ib, ih, 0),
+                ),
+                kv_spec,
+                kv_spec,
+            ],
+            out_specs=[
+                pl.BlockSpec(
+                    (1, group, 1, d),
+                    lambda ib, ih, sp, ik, pt, ln: (ib, ih, sp, 0),
+                ),
+                pl.BlockSpec(
+                    (1, group, 1),
+                    lambda ib, ih, sp, ik, pt, ln: (ib, ih, sp),
+                ),
+                pl.BlockSpec(
+                    (1, group, 1),
+                    lambda ib, ih, sp, ik, pt, ln: (ib, ih, sp),
+                ),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((group, d), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, splits, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, splits), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+    return combine_partials(acc, m, l).astype(q.dtype)

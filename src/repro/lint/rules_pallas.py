@@ -45,6 +45,14 @@ class PallasGridShape(Rule):
         func = module.enclosing_function(call)
         kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
 
+        # grid/in_specs/out_specs may live inside a grid_spec object
+        # (pltpu.PrefetchScalarGridSpec) instead of the pallas_call
+        # kwargs; unwrap it so scalar-prefetch kernels get the same
+        # checks.  Scalar-prefetch refs are passed to index maps as
+        # trailing positional args, so the accepted arity grows by
+        # num_scalar_prefetch.
+        n_prefetch = self._unwrap_grid_spec(module, func, kwargs)
+
         grid_node = kwargs.get("grid")
         grid_len, grid_elts = self._resolve_grid(module, func, grid_node)
 
@@ -57,9 +65,35 @@ class PallasGridShape(Rule):
         # -- BlockSpecs -------------------------------------------------
         for spec in self._iter_blockspecs(module, func, kwargs):
             findings.extend(
-                self._check_blockspec(module, func, spec, grid_len)
+                self._check_blockspec(
+                    module, func, spec, grid_len, n_prefetch
+                )
             )
         return findings
+
+    def _unwrap_grid_spec(self, module, func, kwargs):
+        """Merge a PrefetchScalarGridSpec's grid/in_specs/out_specs into
+        ``kwargs`` (in place); return its num_scalar_prefetch (else 0)."""
+        node = kwargs.get("grid_spec")
+        if node is None:
+            return 0
+        if isinstance(node, ast.Name) and func is not None:
+            resolved = _nearest_assignment(func, node.id, node.lineno)
+            if resolved is not None:
+                node = resolved
+        if not isinstance(node, ast.Call):
+            return 0
+        cname = module.resolver.dotted(node.func) or ""
+        if not cname.endswith("GridSpec"):
+            return 0
+        gs_kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+        for key in ("grid", "in_specs", "out_specs"):
+            if key in gs_kwargs and key not in kwargs:
+                kwargs[key] = gs_kwargs[key]
+        n_node = gs_kwargs.get("num_scalar_prefetch")
+        if isinstance(n_node, ast.Constant) and isinstance(n_node.value, int):
+            return n_node.value
+        return 0
 
     def _resolve_grid(self, module, func, grid_node):
         """Resolve the grid expression to (length | None, element nodes)."""
@@ -173,7 +207,7 @@ class PallasGridShape(Rule):
                     if cname.endswith("BlockSpec"):
                         yield cur
 
-    def _check_blockspec(self, module, func, spec, grid_len):
+    def _check_blockspec(self, module, func, spec, grid_len, n_prefetch=0):
         findings = []
         kwargs = {kw.arg: kw.value for kw in spec.keywords if kw.arg}
         shape_node = spec.args[0] if spec.args else kwargs.get(
@@ -185,7 +219,10 @@ class PallasGridShape(Rule):
         shape_lens = set(self._tuple_lens(shape_node))
         for lam in self._iter_lambdas(module, func, map_node):
             n_pos = len(lam.args.args) - len(lam.args.defaults)
-            if grid_len is not None and n_pos != grid_len:
+            allowed = {grid_len}
+            if n_prefetch:
+                allowed.add((grid_len or 0) + n_prefetch)
+            if grid_len is not None and n_pos not in allowed:
                 findings.append(self.finding(
                     module, lam,
                     f"BlockSpec index map takes {n_pos} positional "

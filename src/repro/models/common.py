@@ -436,6 +436,52 @@ def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
     return g.reshape((b, P * psz) + pool.shape[2:])
 
 
+def _decode_step_kernel(q, kc, vc, kv_len, cfg, pages):
+    """Route the s == 1 decode step through the Pallas split-KV kernels.
+
+    A single causal query sits at its slot's cursor, so the causal mask is
+    subsumed by the length mask (``ki <= cursor``  <=>  ``ki < kv_len``):
+    the kernels' per-slot ``lengths`` masking reproduces ``_sdpa``'s
+    causal + ``kv_len`` masking exactly.
+
+    ``pallas_paged`` on a paged cache dereferences the page table inside
+    the kernel (no ``gather_pages`` copy — the pool is read in place);
+    any other non-"xla" value (``pallas_gather``) runs the same kernel
+    math over the dense gathered view with the KV block pinned to the
+    page size, which makes it the bit-identity reference for the paged
+    path (see kernels/decode_attention).  On a contiguous cache both fall
+    back to the dense kernel over the ring.
+    """
+    from repro.kernels.decode_attention import ops as dec_ops
+
+    q1 = q[:, 0]                                       # (b, hq, dh)
+    if pages is not None:
+        psz, n_pages = kc.shape[1], pages.shape[1]
+        splits = max(1, min(
+            cfg.decode_splits or dec_ops.plan_splits(n_pages * psz, psz),
+            n_pages,
+        ))
+        if cfg.decode_kernel == "pallas_paged":
+            out = dec_ops.paged_decode_attention(
+                q1, kc, vc, pages, kv_len, splits=splits
+            )
+        else:
+            kd = jnp.swapaxes(gather_pages(kc, pages), 1, 2)
+            vd = jnp.swapaxes(gather_pages(vc, pages), 1, 2)
+            out = dec_ops.decode_attention(
+                q1, kd, vd, kv_len, bkv=psz, splits=splits
+            )
+    else:
+        t = kc.shape[1]
+        bkv = min(512, t)
+        splits = cfg.decode_splits or dec_ops.plan_splits(t, bkv)
+        out = dec_ops.decode_attention(
+            q1, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2), kv_len,
+            bkv=bkv, splits=splits,
+        )
+    return out[:, None]                                # (b, 1, hq, dh)
+
+
 def apply_attn(
     p: Params,
     x: jnp.ndarray,                   # (b, s, d)
@@ -463,6 +509,7 @@ def apply_attn(
 
     new_cache = None
     kv_len = None
+    kernel_out = None
     q_offset: Any = 0
     is_cross_cached = cache is not None and "lengths" not in cache
     if cache is not None:
@@ -475,29 +522,40 @@ def apply_attn(
             # advances.
             lengths = cache["lengths"]
             if "pages" in cache:
-                # Paged pool: scatter through the page table, then gather a
-                # dense per-slot view for the same masked online-softmax.
+                # Paged pool: scatter through the page table.  The XLA
+                # path then gathers a dense per-slot view for the masked
+                # online-softmax; the Pallas decode-step path below reads
+                # the pool in place instead — no gather copy.
                 pages = cache["pages"]
                 kc = append_kv_paged(cache["k"], k, lengths, seg_lens, pages)
                 vc = append_kv_paged(cache["v"], v, lengths, seg_lens, pages)
-                k = gather_pages(kc, pages)
-                v = gather_pages(vc, pages)
             else:
                 kc = append_kv(cache["k"], k, lengths, seg_lens)
                 vc = append_kv(cache["v"], v, lengths, seg_lens)
-                k, v = kc, vc
             kv_len = lengths + (
                 jnp.int32(s) if seg_lens is None else seg_lens
             )
             new_cache = {"k": kc, "v": vc}
             q_offset = lengths
+            if cfg.decode_kernel != "xla" and s == 1 and causal:
+                kernel_out = _decode_step_kernel(
+                    q, kc, vc, kv_len, cfg, cache.get("pages")
+                )
+            elif "pages" in cache:
+                k = gather_pages(kc, pages)
+                v = gather_pages(vc, pages)
+            else:
+                k, v = kc, vc
         else:
             # Cross-attention: cache holds precomputed source K/V.
             k, v = cache["k"], cache["v"]
             new_cache = cache
     is_cross = kv_src is not None or is_cross_cached
-    out = _sdpa(q, k, v, causal=causal and not is_cross,
-                q_offset=q_offset, kv_len=kv_len)
+    if kernel_out is not None:
+        out = kernel_out
+    else:
+        out = _sdpa(q, k, v, causal=causal and not is_cross,
+                    q_offset=q_offset, kv_len=kv_len)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, new_cache
 

@@ -202,7 +202,6 @@ class ServeEngine:
                  journal_path: str | None = None,
                  no_progress_limit: int = 256):
         self.cfg = cfg
-        self.model = build_model(cfg)
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
@@ -256,6 +255,16 @@ class ServeEngine:
         # every subsequent admission wave (re-plans are the admission-time
         # hot path).
         self.decode_plan = self._plan_decode()
+        # Paged split-KV decode kernel (DESIGN.md §5.2): the engine's
+        # decode plan decides the kernel's split-K parallelism, and jitted
+        # model traces need that count static — so it is baked into the
+        # config the model is built with.  cfg.decode_splits == 0 means
+        # "let the decode plan decide"; an explicit count wins.
+        self.decode_splits = self._decode_kernel_splits()
+        if cfg.decode_kernel != "xla" and cfg.decode_splits == 0:
+            cfg = dataclasses.replace(cfg, decode_splits=self.decode_splits)
+            self.cfg = cfg
+        self.model = build_model(cfg)
         self.cache = self.model.init_cache(
             params, batch=batch_slots, max_len=max_len, **self._cache_kwargs
         )
@@ -471,6 +480,22 @@ class ServeEngine:
             name="serve_decode",
         ))
 
+    def _decode_kernel_splits(self) -> int:
+        """Split-K parallelism for the Pallas decode kernels, planned from
+        ``decode_plan`` (one split per engine-planned KV block) unless the
+        config pins an explicit count.  Paged engines split over logical
+        pages (the kernel's KV block is one page); contiguous ones over
+        the ring."""
+        from repro.kernels.decode_attention.ops import plan_splits
+
+        if self.cfg.decode_splits:
+            return self.cfg.decode_splits
+        if self.paged:
+            s, bkv = self.pages_per_slot * self.page_size, self.page_size
+        else:
+            s, bkv = self.max_len, min(512, self.max_len)
+        return plan_splits(s, bkv, plan=self.decode_plan)
+
     def policy_report(self) -> dict:
         """Serving-side policy decisions (DESIGN.md §5) + planner counters."""
         report = {
@@ -580,6 +605,13 @@ class ServeEngine:
                 },
                 "vmem_bytes": self.decode_plan.vmem_bytes,
                 "grid_order": list(self.decode_plan.grid_order),
+                # Which decode-step kernel the model was traced with, and
+                # the split-K count baked from decode_plan (== grid
+                # parallelism of the Pallas kernels when != "xla").
+                "kernel": self.cfg.decode_kernel,
+                "planned_splits": self.decode_splits,
+                "kernel_bkv": (self.page_size if self.paged
+                               else min(512, self.max_len)),
             }
         return report
 

@@ -103,6 +103,188 @@ class TestDecodeAttention:
         )
 
 
+def _gather(pool, pages):
+    """gather_pages' clamp-to-page-0 contract, inlined for independence."""
+    N, psz = pool.shape[0], pool.shape[1]
+    b, P = pages.shape
+    g = jnp.take(pool, jnp.clip(pages, 0, N - 1), axis=0)
+    return g.reshape((b, P * psz) + pool.shape[2:])
+
+
+def _paged_case(key, b, hq, hkv, N, psz, P, d, dtype, unmapped_tail=True):
+    """Random pool + page tables with aliasing (pages sampled with
+    replacement, so slots share physical pages and single tables repeat
+    them — the prefix-sharing/COW shapes) + ragged lengths that include
+    exact page-boundary hits, with optional unmapped -1 tails."""
+    ks = jax.random.split(key, 6)
+    q = _rand(ks[0], (b, hq, d), dtype)
+    k_pool = _rand(ks[1], (N, psz, hkv, d), dtype)
+    v_pool = _rand(ks[2], (N, psz, hkv, d), dtype)
+    pages = jax.random.randint(ks[3], (b, P), 0, N).astype(jnp.int32)
+    mapped = jax.random.randint(ks[4], (b,), 1, P + 1)
+    if unmapped_tail:
+        pages = jnp.where(jnp.arange(P)[None, :] < mapped[:, None],
+                          pages, -1)
+    # Half the slots land exactly on a page boundary, half mid-page.
+    lengths = jax.random.randint(ks[5], (b,), 1, mapped * psz + 1)
+    lengths = jnp.where(jnp.arange(b) % 2 == 0,
+                        jnp.maximum(lengths // psz, 1) * psz, lengths)
+    return q, k_pool, v_pool, pages, lengths.astype(jnp.int32)
+
+
+class TestPagedDecodeAttention:
+    """The paged kernel's contract: bit-identical to gather_pages + the
+    dense split-KV kernel (same splits, bkv == page_size) — gather's
+    clamp-to-page-0-then-mask semantics are the reference."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("cfg", [
+        (2, 8, 2, 12, 16, 4, 64, 1), (2, 8, 2, 12, 16, 4, 64, 4),
+        (3, 4, 4, 9, 8, 5, 32, 2), (1, 16, 4, 20, 16, 8, 128, 3),
+    ])
+    def test_bit_identity_vs_gather_path(self, dtype, cfg):
+        from repro.kernels.decode_attention import ops, ref
+
+        b, hq, hkv, N, psz, P, d, splits = cfg
+        q, kp, vp, pages, lengths = _paged_case(
+            jax.random.PRNGKey(7), b, hq, hkv, N, psz, P, d, dtype
+        )
+        got = ops.paged_decode_attention(q, kp, vp, pages, lengths,
+                                         splits=splits)
+        kd = jnp.swapaxes(_gather(kp, pages), 1, 2)
+        vd = jnp.swapaxes(_gather(vp, pages), 1, 2)
+        want = ops.decode_attention(q, kd, vd, lengths, bkv=psz,
+                                    splits=splits)
+        # Bitwise: the paged index-map indirection must change nothing.
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        oracle = ref.decode_attention(q, kd, vd, lengths)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(oracle, np.float32),
+            **TOL[dtype],
+        )
+
+    def test_aliased_shared_pages(self):
+        """Two slots whose tables alias the same physical pages (prefix
+        sharing) see identical rows: same q => bit-identical output."""
+        from repro.kernels.decode_attention import ops
+
+        psz, d = 8, 32
+        ks = jax.random.split(jax.random.PRNGKey(8), 3)
+        q1 = _rand(ks[0], (1, 4, d), jnp.float32)
+        q = jnp.concatenate([q1, q1], axis=0)
+        kp = _rand(ks[1], (6, psz, 2, d), jnp.float32)
+        vp = _rand(ks[2], (6, psz, 2, d), jnp.float32)
+        pages = jnp.asarray([[2, 5, 2], [2, 5, 2]], jnp.int32)
+        lengths = jnp.asarray([20, 20], jnp.int32)
+        out = ops.paged_decode_attention(q, kp, vp, pages, lengths, splits=2)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+    def test_unmapped_tail_contributes_nothing(self):
+        """Poisoning every page not reachable below the cursor (including
+        the clamp target of -1 entries' positions past lengths) must not
+        change a single bit of the output."""
+        from repro.kernels.decode_attention import ops
+
+        b, hq, hkv, N, psz, P, d = 2, 4, 2, 8, 8, 4, 32
+        q, kp, vp, pages, _ = _paged_case(
+            jax.random.PRNGKey(9), b, hq, hkv, N, psz, P, d, jnp.float32,
+            unmapped_tail=False,
+        )
+        pages = jnp.asarray([[3, 1, -1, -1], [6, -1, -1, -1]], jnp.int32)
+        lengths = jnp.asarray([2 * psz, psz - 3], jnp.int32)
+        clean = ops.paged_decode_attention(q, kp, vp, pages, lengths)
+        reachable = jnp.zeros((N,), bool).at[jnp.asarray([3, 1, 6, 0])].set(
+            True
+        )  # page 0 is the -1 clamp target: read (masked), so keep it clean
+        poison = jnp.where(reachable[:, None, None, None], kp, 1e9)
+        vpois = jnp.where(reachable[:, None, None, None], vp, -1e9)
+        dirty = ops.paged_decode_attention(q, poison, vpois, pages, lengths)
+        np.testing.assert_array_equal(np.asarray(clean), np.asarray(dirty))
+
+    def test_splits_invariance(self):
+        """The split-K decomposition is a numerical no-op (combine merges
+        partials in fp32): every split count agrees tightly."""
+        from repro.kernels.decode_attention import ops
+
+        b, hq, hkv, N, psz, P, d = 2, 8, 2, 12, 16, 6, 64
+        q, kp, vp, pages, lengths = _paged_case(
+            jax.random.PRNGKey(10), b, hq, hkv, N, psz, P, d, jnp.float32
+        )
+        outs = [
+            np.asarray(ops.paged_decode_attention(
+                q, kp, vp, pages, lengths, splits=s
+            ))
+            for s in (1, 2, 3, P, P + 5)   # over-asking clamps to P pages
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+class TestDecodeAttentionPlanning:
+    """Regression pins for the ops.py wiring bugs: floor-div split
+    planning, the ignored ``engine`` argument, and the inner kernel's
+    hard-coded interpret=True."""
+
+    def test_plan_splits_counts_padded_grid_blocks(self):
+        from repro.kernels.decode_attention.ops import plan_splits
+
+        # s=513, bkv=512: the padded grid runs 2 blocks — floor division
+        # said 1 and starved the second block of a split of its own.
+        assert plan_splits(513, 512) == 2
+        assert plan_splits(512, 512) == 1
+        assert plan_splits(4096, 512) == 8
+        assert plan_splits(4097, 512, target_parallelism=16) == 9
+
+    def test_engine_plan_drives_splits(self):
+        from repro.core import make_engine
+        from repro.core.characterize import attention_op
+        from repro.kernels.decode_attention.ops import plan_splits
+
+        eng = make_engine()
+        plan = eng.plan_op(attention_op(2, 8, 2, 1, 4096, 64, causal=False,
+                                        name="decode_attention"))
+        want = max(1, min((4096 + plan.block["bkv"] - 1)
+                          // plan.block["bkv"], 4096 // 16))
+        assert plan_splits(4096, 16, plan=plan) == want
+
+    def test_engine_argument_is_consulted(self):
+        import types
+
+        from repro.kernels.decode_attention import ops, ref
+
+        calls = []
+
+        def plan_op(op):
+            calls.append(op)
+            return types.SimpleNamespace(block={"bq": 1, "bkv": 64})
+
+        fake = types.SimpleNamespace(plan_op=plan_op)
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        q = _rand(ks[0], (2, 8, 64), jnp.float32)
+        k = _rand(ks[1], (2, 2, 256, 64), jnp.float32)
+        v = _rand(ks[2], (2, 2, 256, 64), jnp.float32)
+        got = ops.decode_attention(q, k, v, engine=fake)
+        assert len(calls) == 1, "engine plan must be consulted"
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.decode_attention(q, k, v)),
+            **TOL[jnp.float32],
+        )
+
+    def test_inner_kernels_default_interpret_from_backend(self):
+        import inspect
+
+        from repro.kernels.decode_attention.decode_attention import (
+            decode_attention, paged_decode_attention,
+        )
+
+        for fn in (decode_attention, paged_decode_attention):
+            sig = inspect.signature(fn)
+            assert sig.parameters["interpret"].default is None, (
+                "inner kernels must defer to interpret_default(), not "
+                "hard-code interpret=True (silently interpreted on TPU)"
+            )
+
+
 class TestSSD:
     @pytest.mark.parametrize("cfg", [
         (2, 128, 4, 32, 2, 16, 32), (1, 100, 2, 64, 1, 32, 32),

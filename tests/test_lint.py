@@ -432,6 +432,54 @@ def test_r006_return_length_mismatch():
     assert "misaligned" in r6[0].message
 
 
+def test_r006_grid_spec_unwrapped_scalar_prefetch():
+    # grid/in_specs inside a pltpu.PrefetchScalarGridSpec are checked too:
+    # scalar-prefetch refs arrive as trailing positional index-map args,
+    # so arity grid_len + num_scalar_prefetch is accepted ...
+    findings = lint(PALLAS_PREAMBLE + """
+        from jax.experimental.pallas import tpu as pltpu
+
+        def call(x, tbl, n):
+            return pl.pallas_call(
+                k,
+                grid_spec=pltpu.PrefetchScalarGridSpec(
+                    num_scalar_prefetch=1,
+                    grid=(cdiv(n, 8),),
+                    in_specs=[pl.BlockSpec(
+                        (8,), lambda i, pt: (pt[i],))],
+                    out_specs=pl.BlockSpec((8,), lambda i, pt: (i,)),
+                ),
+            )(tbl, x)
+    """)
+    assert "R006" not in rule_ids(findings)
+
+
+def test_r006_grid_spec_bad_arity_and_floor_div_flagged():
+    # ... while a map that covers neither the grid alone nor grid +
+    # prefetch refs is flagged, and grid floor-div arithmetic inside the
+    # grid_spec still needs exactness evidence.
+    findings = lint(PALLAS_PREAMBLE + """
+        from jax.experimental.pallas import tpu as pltpu
+
+        def call(x, tbl, n):
+            return pl.pallas_call(
+                k,
+                grid_spec=pltpu.PrefetchScalarGridSpec(
+                    num_scalar_prefetch=1,
+                    grid=(n // 8, 4),
+                    in_specs=[pl.BlockSpec(
+                        (8, 8), lambda i: (i, 0))],
+                    out_specs=pl.BlockSpec(
+                        (8, 8), lambda i, j, pt: (i, j)),
+                ),
+            )(tbl, x)
+    """)
+    r6 = [f for f in findings if f.rule == "R006"]
+    assert len(r6) == 2
+    assert any("cdiv" in f.message for f in r6)
+    assert any("does not cover the grid" in f.message for f in r6)
+
+
 def test_r006_floor_div_grid_without_evidence():
     findings = lint(PALLAS_PREAMBLE + """
         def call(x, n):

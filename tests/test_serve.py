@@ -378,6 +378,61 @@ def test_paged_engine_bit_identical_to_contiguous(arch):
     assert sorted(eng.free_pages) == list(range(5))   # all pages returned
 
 
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "zamba2-2.7b"])
+def test_decode_kernel_paged_bit_identical_to_gather(arch):
+    """The paged Pallas decode kernel (in-kernel page-table dereference,
+    no gather copy) must emit exactly the tokens of the gather-path
+    reference (``decode_kernel="pallas_gather"``: gather_pages + the same
+    dense split-KV kernel) on a pooled paged engine — the clamp-to-page-0
+    -then-mask contract is the reference semantics."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(decode_kernel):
+        rng = np.random.default_rng(2)
+        reqs = [
+            Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                    max_new_tokens=m)
+            for n, m in ((4, 8), (9, 4), (5, 6), (3, 7))
+        ]
+        eng = ServeEngine(
+            dataclasses.replace(_paged(cfg), decode_kernel=decode_kernel),
+            params, batch_slots=2, max_len=32, chunk_size=4, n_pages=5,
+        )
+        eng.run(reqs)
+        assert sorted(eng.free_pages) == list(range(5))
+        return [r.generated for r in reqs], eng
+
+    gather, _ = run("pallas_gather")
+    paged, eng = run("pallas_paged")
+    assert paged == gather, f"{arch}: paged kernel != gather path"
+    rep = eng.policy_report()["decode_attention"]
+    assert rep["kernel"] == "pallas_paged"
+    assert rep["planned_splits"] >= 1
+    assert rep["kernel_bkv"] == eng.page_size
+
+
+def test_decode_kernel_splits_baked_from_plan():
+    """cfg.decode_splits == 0 means the engine bakes its decode plan's
+    split count into the model config (jitted traces need it static); an
+    explicit count wins over the plan."""
+    cfg = get_config("qwen2.5-32b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    auto = ServeEngine(
+        dataclasses.replace(_paged(cfg), decode_kernel="pallas_paged"),
+        params, batch_slots=2, max_len=32,
+    )
+    assert auto.cfg.decode_splits == auto.decode_splits >= 1
+    pinned = ServeEngine(
+        dataclasses.replace(_paged(cfg), decode_kernel="pallas_paged",
+                            decode_splits=2),
+        params, batch_slots=2, max_len=32,
+    )
+    assert pinned.decode_splits == 2
+    assert pinned.policy_report()["decode_attention"]["planned_splits"] == 2
+
+
 def test_paged_pool_oversubscription_mixed_lengths():
     """The acceptance workload: a mixed long/short request set runs in a
     page pool HALF the contiguous reservation (2x effective capacity) and
